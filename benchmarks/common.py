@@ -1,0 +1,59 @@
+"""Shared benchmark utilities: timing, Table-1 layers, CSV output.
+
+CPU-host methodology (recorded in EXPERIMENTS.md): wall-clock comparisons
+run each *algorithm* in its XLA-compiled jnp form -- arithmetic-reduction
+and fusion effects are measured for real; the Pallas TPU kernels are
+validated in interpret mode and their performance is *modeled* (blocking
+analysis + dry-run roofline), because this container has no TPU.
+Spatial dims are scaled by ``--scale`` (default 1/8) so the full Table-1
+sweep completes in minutes on one CPU core; channel dims (which set GEMM
+shapes) are kept exact.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.models.cnn import TABLE1_LAYERS  # noqa: F401
+
+
+def timeit(fn, *args, reps: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds of jit-compiled fn(*args)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def scaled_layers(scale: float):
+    """Table-1 layers with spatial dims scaled (channels exact)."""
+    out = []
+    for spec in TABLE1_LAYERS:
+        h = max(8, int(spec.H * scale))
+        out.append(spec.__class__(spec.name, spec.C, spec.K, h, h,
+                                  spec.r, spec.pad))
+    return out
+
+
+def emit(rows: list[dict], header: str):
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    print(f"## {header}")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r[c]) for c in cols))
+    print()
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)

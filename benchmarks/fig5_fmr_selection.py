@@ -1,0 +1,47 @@
+"""Fig. 5 analogue: F(2,3) vs F(4,3) vs F(6,3) per Table-1 layer.
+
+Wall-clock (XLA-compiled Winograd pipeline per m) + the framework's
+F(m,r) selection-policy choice.  The paper's finding -- larger m wins on
+shallow layers (big T), smaller m on deep layers (transform overhead) --
+re-emerges from the measured times.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import conv2d
+from repro.core.blocking import select_tile_m
+
+from .common import emit, scaled_layers, timeit
+
+
+def run(scale: float = 0.125, reps: int = 3) -> list[dict]:
+    rows = []
+    for spec in scaled_layers(scale):
+        x = jax.random.normal(jax.random.PRNGKey(0),
+                              (1, spec.H, spec.W, spec.C), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1),
+                              (3, 3, spec.C, spec.K), jnp.float32)
+        times = {}
+        for m in (2, 4, 6):
+            fn = jax.jit(functools.partial(
+                conv2d, pad=1, algorithm="winograd", m=m))
+            times[m] = timeit(fn, x, w, reps=reps)
+        chosen = select_tile_m(1, spec.H, spec.W, spec.C, spec.K)
+        best = min(times, key=times.get)
+        rows.append({
+            "layer": spec.name, "H": spec.H, "C": spec.C, "K": spec.K,
+            "t_F2_ms": times[2] * 1e3, "t_F4_ms": times[4] * 1e3,
+            "t_F6_ms": times[6] * 1e3,
+            "fastest_m": best, "policy_m": chosen,
+        })
+    emit(rows, "fig5: F(m,3) per layer (wall ms, host) + selection policy")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

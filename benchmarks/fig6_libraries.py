@@ -1,0 +1,63 @@
+"""Fig. 6 analogue: algorithm comparison per layer.
+
+The paper compares its fused Winograd against NCNN (GEMM Winograd,
+non-fused) and NNPACK (TEWMM).  Our measured stand-ins, all XLA-compiled:
+
+  direct     XLA direct convolution
+  im2col     im2col + one GEMM
+  tewmm      Winograd with tuple-element-wise multiply (NNPACK-style)
+  winograd   Winograd with L-batched GEMM (NCNN-style layout)
+
+plus the framework's "auto" (policy-selected F(m,r)).  Speedups are
+reported vs direct and vs tewmm (the paper's headline is vs these
+libraries).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import conv2d
+
+from .common import emit, scaled_layers, timeit
+
+ALGOS = ("direct", "im2col", "winograd_tewmm", "winograd")
+
+
+def run(scale: float = 0.125, reps: int = 3) -> list[dict]:
+    rows = []
+    for spec in scaled_layers(scale):
+        x = jax.random.normal(jax.random.PRNGKey(0),
+                              (1, spec.H, spec.W, spec.C), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1),
+                              (3, 3, spec.C, spec.K), jnp.float32)
+        times = {}
+        for algo in ALGOS:
+            fn = jax.jit(functools.partial(conv2d, pad=1, algorithm=algo, m=6))
+            times[algo] = timeit(fn, x, w, reps=reps)
+        rows.append({
+            "layer": spec.name,
+            **{f"t_{a}_ms": times[a] * 1e3 for a in ALGOS},
+            "speedup_vs_direct": times["direct"] / times["winograd"],
+            "speedup_vs_tewmm": times["winograd_tewmm"] / times["winograd"],
+        })
+    gm_direct = _geomean([r["speedup_vs_direct"] for r in rows])
+    gm_tewmm = _geomean([r["speedup_vs_tewmm"] for r in rows])
+    rows.append({"layer": "GEOMEAN",
+                 **{f"t_{a}_ms": 0.0 for a in ALGOS},
+                 "speedup_vs_direct": gm_direct,
+                 "speedup_vs_tewmm": gm_tewmm})
+    emit(rows, "fig6: algorithm comparison per layer (host wall ms)")
+    return rows
+
+
+def _geomean(xs):
+    import math
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""SSRoofline table: renders the dry-run matrix results (results/*.json).
+
+One row per (arch x shape x mesh): the three roofline terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and bytes/device.  Requires
+``python -m repro.launch.dryrun --all --out results/dryrun_singlepod.json``
+to have produced the artifact; prints a note when absent (the benchmark
+suite stays runnable on a fresh checkout).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+RESULTS = ("results/dryrun_singlepod.json", "results/dryrun_multipod.json")
+
+
+def run() -> list[dict]:
+    rows = []
+    for path in RESULTS:
+        if not os.path.exists(path):
+            print(f"# roofline: {path} missing "
+                  f"(run repro.launch.dryrun --all --out {path})\n")
+            continue
+        with open(path) as f:
+            for r in json.load(f):
+                if r.get("status") == "SKIP":
+                    rows.append({"arch": r["arch"], "shape": r["shape"],
+                                 "mesh": r["mesh"], "bottleneck": "SKIP",
+                                 "t_compute_ms": 0, "t_memory_ms": 0,
+                                 "t_collective_ms": 0, "useful_ratio": 0,
+                                 "roofline_pct": 0, "GiB_per_dev": 0})
+                elif r.get("status") == "OK":
+                    rows.append({
+                        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                        "bottleneck": r["bottleneck"],
+                        "t_compute_ms": r["t_compute_ms"],
+                        "t_memory_ms": r["t_memory_ms"],
+                        "t_collective_ms": r["t_collective_ms"],
+                        "useful_ratio": r["useful_ratio"],
+                        "roofline_pct": 100 * r["roofline_fraction"],
+                        "GiB_per_dev": (r.get("bytes_per_device") or 0) / 2**30,
+                    })
+    emit(rows, "roofline: dry-run matrix terms")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

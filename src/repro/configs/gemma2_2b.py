@@ -1,0 +1,54 @@
+"""gemma2-2b [dense]: 26L d2304 8H (GQA kv=4) ff9216 vocab 256000.
+
+Local(4096-window)/global alternating attention, attn softcap 50, final
+logit softcap 30, GeGLU, post-block norms, tied embeddings, head_dim 256.
+[arXiv:2408.00118; hf google/gemma-2-2b]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-2b",
+    family="dense",
+    n_layers=26,
+    d_model=2304,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab=256_000,
+    mlp="geglu",
+    norm="rmsnorm",
+    rope_mode="full",
+    sliding_window=4096,
+    local_global_alternate=True,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    post_block_norm=True,
+    tie_embeddings=True,
+    head_pad=16,
+    vocab_pad=256,
+)
+
+SMOKE = ModelConfig(
+    name="gemma2-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab=512,
+    mlp="geglu",
+    sliding_window=8,
+    local_global_alternate=True,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    post_block_norm=True,
+    tie_embeddings=True,
+    dtype="float32",
+    param_dtype="float32",
+    q_chunk=8,
+    kv_chunk=8,
+)

@@ -1,0 +1,59 @@
+"""kimi-k2-1t-a32b [moe]: 61L d7168 64H (GQA kv=8) expert-ff 2048
+vocab 163840, 384 experts top-8 + 1 shared expert, first layer dense.
+
+~1.03T total parameters.  Optimizer state at this scale forces the
+factored-second-moment path (``optimizer="adafactor"``) -- full Adam fp32
+state (8 bytes/param) would need 32 GB/chip on the 256-chip pod.
+[arXiv:2501.kimi2 paper-table; unverified]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=112,
+    d_ff=2048,
+    d_ff_expert=2048,
+    vocab=163_840,
+    n_experts=384,
+    top_k=8,
+    n_shared_experts=1,
+    first_k_dense=1,
+    capacity_factor=1.25,
+    mlp="swiglu",
+    norm="rmsnorm",
+    rope_mode="full",
+    head_pad=16,
+    vocab_pad=256,
+    fsdp_params=True,
+    optimizer="adafactor",
+)
+
+SMOKE = ModelConfig(
+    name="kimi-k2-smoke",
+    family="moe",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=64,
+    d_ff_expert=64,
+    vocab=512,
+    n_experts=8,
+    top_k=2,
+    capacity_factor=8.0,
+    n_shared_experts=1,
+    first_k_dense=1,
+    mlp="swiglu",
+    dtype="float32",
+    param_dtype="float32",
+    q_chunk=8,
+    kv_chunk=8,
+    optimizer="adafactor",
+)

@@ -1,0 +1,43 @@
+"""mistral-large-123b [dense]: 88L d12288 96H (GQA kv=8) ff28672 vocab 32768.
+
+[hf:mistralai/Mistral-Large-Instruct-2407; unverified]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-large-123b",
+    family="dense",
+    n_layers=88,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab=32768,
+    mlp="swiglu",
+    norm="rmsnorm",
+    rope_mode="full",
+    rope_theta=1_000_000.0,
+    head_pad=16,
+    vocab_pad=256,
+    fsdp_params=True,
+)
+
+SMOKE = ModelConfig(
+    name="mistral-large-smoke",
+    family="dense",
+    n_layers=3,
+    d_model=96,
+    n_heads=6,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=256,
+    vocab=512,
+    mlp="swiglu",
+    rope_theta=1_000_000.0,
+    dtype="float32",
+    param_dtype="float32",
+    q_chunk=8,
+    kv_chunk=8,
+)

@@ -1,0 +1,47 @@
+"""phi3.5-moe-42b-a6.6b [moe]: 32L d4096 32H (GQA kv=8) expert-ff 6400
+vocab 32064, 16 experts top-2.  [hf:microsoft/Phi-3.5-MoE-instruct]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=6400,
+    d_ff_expert=6400,
+    vocab=32064,
+    n_experts=16,
+    top_k=2,
+    capacity_factor=1.25,
+    mlp="swiglu",
+    norm="rmsnorm",
+    rope_mode="full",
+    head_pad=16,
+    vocab_pad=256,
+)
+
+SMOKE = ModelConfig(
+    name="phi3.5-moe-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=96,
+    d_ff_expert=96,
+    vocab=512,
+    n_experts=4,
+    top_k=2,
+    capacity_factor=8.0,
+    mlp="swiglu",
+    dtype="float32",
+    param_dtype="float32",
+    q_chunk=8,
+    kv_chunk=8,
+)

@@ -1,0 +1,45 @@
+"""phi4-mini-3.8b [dense]: 32L d3072 24H (GQA kv=8) ff8192 vocab 200064.
+
+RoPE + SwiGLU + GQA; tied embeddings.  Q heads are TP-padded 24 -> 32
+(zero-extended wq/wo; exact math -- see layers._pad_heads).
+[arXiv:2412.08905; hf microsoft/Phi-4-mini-instruct]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi4-mini-3.8b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab=200_064,
+    mlp="swiglu",
+    norm="rmsnorm",
+    rope_mode="full",
+    tie_embeddings=True,
+    head_pad=16,
+    vocab_pad=256,
+)
+
+SMOKE = ModelConfig(
+    name="phi4-mini-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=48,
+    n_heads=3,          # deliberately non-divisible: exercises head padding
+    n_kv_heads=1,
+    head_dim=16,
+    d_ff=128,
+    vocab=512,
+    mlp="swiglu",
+    tie_embeddings=True,
+    head_pad=4,
+    dtype="float32",
+    param_dtype="float32",
+    q_chunk=8,
+    kv_chunk=8,
+)

@@ -1,0 +1,48 @@
+"""qwen2-vl-7b [vlm]: 28L d3584 28H (GQA kv=4) ff18944 vocab 152064.
+
+M-RoPE (t/h/w sections 16/24/24 over the 64 half-dims); dynamic-resolution
+vision frontend is a STUB per the assignment -- ``input_specs`` supplies
+precomputed patch embeddings that replace the leading token embeddings.
+Q heads TP-padded 28 -> 32.  [arXiv:2409.12191; hf Qwen/Qwen2-VL-7B]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab=152_064,
+    mlp="swiglu",
+    norm="rmsnorm",
+    rope_mode="mrope",
+    mrope_sections=(16, 24, 24),
+    num_image_tokens=256,
+    head_pad=16,
+    vocab_pad=256,
+)
+
+SMOKE = ModelConfig(
+    name="qwen2-vl-smoke",
+    family="vlm",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab=512,
+    mlp="swiglu",
+    rope_mode="mrope",
+    mrope_sections=(2, 3, 3),
+    num_image_tokens=4,
+    dtype="float32",
+    param_dtype="float32",
+    q_chunk=8,
+    kv_chunk=8,
+)

@@ -1,0 +1,35 @@
+"""rwkv6-1.6b "Finch" [ssm]: 24L d2048 (attention-free) ff7168 vocab 65536.
+
+Data-dependent decay time-mix (WKV-6 recurrence) + squared-ReLU channel
+mix; O(1) per-token state => runs the long_500k cell.
+[arXiv:2404.05892; unverified]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,          # informational: d / ssm_head_dim
+    n_kv_heads=32,
+    d_ff=7168,
+    vocab=65536,
+    ssm_head_dim=64,
+    vocab_pad=256,
+)
+
+SMOKE = ModelConfig(
+    name="rwkv6-smoke",
+    family="ssm",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab=512,
+    ssm_head_dim=16,
+    dtype="float32",
+    param_dtype="float32",
+)

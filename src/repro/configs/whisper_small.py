@@ -1,0 +1,53 @@
+"""whisper-small [audio]: 12L encoder + 12L decoder, d768 12H MHA ff3072
+vocab 51865; conv frontend is a STUB per the assignment (``input_specs``
+provides precomputed frame embeddings).  Heads TP-padded 12 -> 16 (Q and
+KV).  Sinusoidal positions on both sides (decoder positions are learned and
+capped at 448 in the published model; sinusoids keep the 32k decode shape
+well-defined -- recorded in DESIGN.md).  [arXiv:2212.04356; unverified]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    n_layers=12,
+    n_encoder_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab=51865,
+    mlp="gelu",
+    norm="layernorm",
+    rope_mode="none",
+    encoder_len=1500,
+    frontend="stub",
+    mel_bins=80,
+    head_pad=16,
+    kv_head_pad=16,
+    vocab_pad=256,
+)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke",
+    family="audio",
+    n_layers=2,
+    n_encoder_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab=512,
+    mlp="gelu",
+    norm="layernorm",
+    rope_mode="none",
+    encoder_len=24,
+    frontend="stub",
+    dtype="float32",
+    param_dtype="float32",
+    q_chunk=8,
+    kv_chunk=8,
+)

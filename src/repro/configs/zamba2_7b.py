@@ -1,0 +1,49 @@
+"""zamba2-7b [hybrid]: 81 Mamba-2 layers d3584, one weight-shared
+attention+MLP block (32H MHA, head_dim 112, ff 14336) applied every 6
+layers; ssm_state=64.  vocab 32000.  [arXiv:2411.15242; unverified]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab=32000,
+    mlp="geglu",
+    norm="rmsnorm",
+    rope_mode="full",
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_conv_r=4,
+    hybrid_period=6,
+    head_pad=16,
+    vocab_pad=256,
+)
+
+SMOKE = ModelConfig(
+    name="zamba2-smoke",
+    family="hybrid",
+    n_layers=7,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab=512,
+    mlp="geglu",
+    ssm_state=16,
+    ssm_head_dim=16,
+    ssm_expand=2,
+    hybrid_period=3,
+    dtype="float32",
+    param_dtype="float32",
+    q_chunk=8,
+    kv_chunk=8,
+)

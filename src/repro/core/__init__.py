@@ -1,0 +1,16 @@
+"""Core: the paper's contribution (fused Winograd convolution) in JAX."""
+
+from .conv import conv1d, conv2d, winograd_eligible  # noqa: F401
+from .transforms import (  # noqa: F401
+    arithmetic_reduction_1d,
+    arithmetic_reduction_2d,
+    cook_toom,
+    transform_arrays,
+)
+from .winograd import (  # noqa: F401
+    direct_conv1d,
+    direct_conv2d,
+    im2col_conv2d,
+    winograd_conv1d_reference,
+    winograd_conv2d_reference,
+)

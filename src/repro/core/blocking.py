@@ -1,0 +1,167 @@
+"""Blocking-parameter model: the TPU analogue of the paper's SS3.2.2.
+
+The paper chooses (T_blk, C_blk, K_blk) by minimizing a modeled data-movement
+cost (Eq. 15) under L1/L2 capacity constraints (Eq. 10/11), with K_blk and
+C_blk multiples of 16 to avoid edge cases.  On TPU the cache hierarchy
+collapses to HBM->VMEM, so:
+
+  * the capacity constraint (Eq. 10/11 analogue) is the fused kernel's VMEM
+    working set -- V, U stream blocks (double-buffered by the Pallas
+    pipeline), the f32 accumulator, and the output tile block;
+
+  * the traffic objective (Eq. 15 analogue) counts HBM bytes:
+
+      bytes(V)   = e * L*T*C * ceil(K/K_blk)     (V re-read per K block)
+      bytes(U)   = e * L*C*K * ceil(T/T_blk)     (U re-read per T block)
+      bytes(out) = e * T*m^2*K                   (written once -- the fused
+                                                  saving; non-fused adds
+                                                  2 * 4 * L*T*K for O^)
+
+  * edge-case avoidance becomes MXU/lane alignment: blocks are multiples of
+    (8, 128) and the T/C/K extents are zero-padded up to block multiples
+    (zero rows/columns are exact no-ops through the bilinear algorithm).
+
+``choose_blocks`` enumerates the aligned candidate space and returns the
+traffic-minimizing configuration -- a deterministic analytical choice, like
+the paper's heuristic, not an autotuner.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from . import hw
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    block_t: int
+    block_c: int
+    block_k: int
+    vmem_bytes: int
+    hbm_bytes_fused: int
+    hbm_bytes_nonfused: int
+
+    def as_kwargs(self) -> dict:
+        return dict(block_t=self.block_t, block_c=self.block_c, block_k=self.block_k)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(x: int, mult: int) -> int:
+    return _ceil_div(x, mult) * mult
+
+
+def fused_vmem_bytes(L: int, m: int, bt: int, bc: int, bk: int, elt: int) -> int:
+    v_stream = 2 * L * bt * bc * elt          # double-buffered
+    u_stream = 2 * L * bc * bk * elt
+    acc = L * bt * bk * 4                     # f32 accumulator scratch
+    out = 2 * bt * m * m * bk * elt
+    return v_stream + u_stream + acc + out
+
+
+def hbm_traffic(L: int, m: int, T: int, C: int, K: int, bt: int, bk: int, elt: int,
+                fused: bool) -> int:
+    v = L * T * C * _ceil_div(K, bk) * elt
+    u = L * C * K * _ceil_div(T, bt) * elt
+    out = T * m * m * K * elt
+    extra = 0 if fused else 2 * L * T * K * 4   # O^ write + read, f32
+    return v + u + out + extra
+
+
+@functools.lru_cache(maxsize=None)
+def choose_blocks(
+    T: int,
+    C: int,
+    K: int,
+    m: int,
+    r: int,
+    elt_bytes: int = 4,
+    vmem_budget: int = hw.VMEM_BUDGET,
+) -> BlockConfig:
+    """Pick (block_t, block_c, block_k) minimizing modeled HBM traffic."""
+    a = m + r - 1
+    L = a * a
+
+    def axis_candidates(size: int, granule: int, caps: tuple[int, ...]) -> list[int]:
+        if size <= granule:
+            return [round_up(size, 8) if granule >= 128 else round_up(size, granule)]
+        out = []
+        for cap in caps:
+            b = min(cap, round_up(size, granule))
+            b = min(b, size) if size % cap == 0 or cap <= size else b
+            out.append(min(cap, round_up(size, granule)))
+        return sorted({c for c in out if c > 0})
+
+    t_cands = axis_candidates(T, 8, (64, 128, 256, 512))
+    c_cands = axis_candidates(C, 128, (128, 256))
+    k_cands = axis_candidates(K, 128, (128, 256, 512))
+
+    best: BlockConfig | None = None
+    for bt in t_cands:
+        for bc in c_cands:
+            for bk in k_cands:
+                vm = fused_vmem_bytes(L, m, bt, bc, bk, elt_bytes)
+                if vm > vmem_budget:
+                    continue
+                traffic = hbm_traffic(L, m, T, C, K, bt, bk, elt_bytes, fused=True)
+                cand = BlockConfig(
+                    block_t=bt,
+                    block_c=bc,
+                    block_k=bk,
+                    vmem_bytes=vm,
+                    hbm_bytes_fused=traffic,
+                    hbm_bytes_nonfused=hbm_traffic(L, m, T, C, K, bt, bk, elt_bytes, fused=False),
+                )
+                if (
+                    best is None
+                    or cand.hbm_bytes_fused < best.hbm_bytes_fused
+                    or (
+                        cand.hbm_bytes_fused == best.hbm_bytes_fused
+                        and (bt * bk) > (best.block_t * best.block_k)
+                    )
+                ):
+                    best = cand
+    if best is None:  # nothing fit: fall back to minimum aligned blocks
+        bt, bc, bk = 64, min(128, round_up(C, 8)), min(128, round_up(K, 8))
+        best = BlockConfig(
+            bt, bc, bk,
+            fused_vmem_bytes(L, m, bt, bc, bk, elt_bytes),
+            hbm_traffic(L, m, T, C, K, bt, bk, elt_bytes, True),
+            hbm_traffic(L, m, T, C, K, bt, bk, elt_bytes, False),
+        )
+    return best
+
+
+def select_tile_m(
+    N: int, H: int, W: int, C: int, K: int, r: int = 3,
+    candidates: tuple[int, ...] = (2, 4, 6),
+    elt_bytes: int = 4,
+) -> int:
+    """F(m, r) selection policy -- the paper's C7, re-derived for TPU.
+
+    The paper picks F(6,3) for shallow layers (T large, transform cost
+    amortized) and F(2,3) for deep layers (C/K large, filter-transform and
+    Winograd-domain traffic dominate).  We evaluate a two-term roofline
+    (compute, HBM traffic) per candidate m and take the argmin of the
+    modeled step time -- same policy, analytically grounded.
+    """
+    from . import winograd as _wg  # local import to avoid cycle
+
+    best_m, best_t = None, None
+    for m in candidates:
+        a = m + r - 1
+        P, Q = max(H - r + 1, 1), max(W - r + 1, 1)
+        tH, tW = max(_ceil_div(P, m), 1), max(_ceil_div(Q, m), 1)
+        T = N * tH * tW
+        flops = _wg.winograd_stage_flops(N, H, W, C, K, r, m)["total"]
+        cfg = choose_blocks(T, C, K, m, r, elt_bytes)
+        tiles_bytes = T * a * a * C * elt_bytes           # tile extraction write
+        traffic = cfg.hbm_bytes_fused + tiles_bytes
+        t_est = max(flops / hw.PEAK_FLOPS_F32, traffic / hw.HBM_BW)
+        if best_t is None or t_est < best_t:
+            best_m, best_t = m, t_est
+    return best_m

@@ -1,0 +1,98 @@
+"""Public convolution API: the paper's technique as a first-class framework op.
+
+``conv2d`` exposes every algorithm the paper measures, under one signature:
+
+  algorithm = "direct"           XLA direct convolution (accuracy ground truth)
+            | "im2col"           im2col + one GEMM (classic GEMM conv)
+            | "winograd"         pure-JAX Winograd (reference path, auto-diff)
+            | "winograd_tewmm"   NNPACK-style tuple-element-wise multiply
+            | "winograd_nonfused"  three-stage Pallas pipeline (NCNN-like)
+            | "winograd_fused"   Algorithm 1: the paper's fused pipeline
+            | "auto"             fused Winograd with F(m,r) chosen by the
+                                 selection policy (paper C7) when eligible,
+                                 falling back to direct otherwise
+
+Eligibility for Winograd: square filter, r in {2,3,5...}, stride 1, groups 1.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from . import blocking, winograd as wg
+
+Algorithm = Literal[
+    "direct", "im2col", "winograd", "winograd_tewmm",
+    "winograd_nonfused", "winograd_fused", "auto",
+]
+
+
+def winograd_eligible(w_shape: tuple, stride: int) -> bool:
+    r1, r2 = w_shape[0], w_shape[1]
+    return r1 == r2 and stride == 1 and r1 >= 2 and r1 <= 7
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    algorithm: Algorithm = "auto",
+    m: int | None = None,
+    differentiable: bool = True,
+) -> jax.Array:
+    """2-D convolution (cross-correlation), NHWC x HWIO -> NHWC."""
+    if algorithm == "auto":
+        if winograd_eligible(w.shape, stride):
+            algorithm = "winograd_fused"
+        else:
+            algorithm = "direct"
+
+    if algorithm == "direct":
+        return wg.direct_conv2d(x, w, pad=pad, stride=stride)
+
+    assert stride == 1, f"{algorithm} requires stride 1"
+    r = w.shape[0]
+    if m is None:
+        N, H, W_, C = x.shape
+        K = w.shape[-1]
+        m = blocking.select_tile_m(N, H, W_, C, K, r)
+
+    if algorithm == "im2col":
+        return wg.im2col_conv2d(x, w, pad=pad)
+    if algorithm == "winograd":
+        return wg.winograd_conv2d_reference(x, w, m, pad=pad)
+    if algorithm == "winograd_tewmm":
+        return wg.winograd_conv2d_reference(x, w, m, pad=pad, use_tewmm=True)
+    if algorithm in ("winograd_fused", "winograd_nonfused"):
+        from repro.kernels import ops  # deferred: keeps core importable w/o kernels
+
+        fused = algorithm == "winograd_fused"
+        if differentiable:
+            return ops.conv2d_pallas_ad(x, w, m, pad, fused)
+        return ops.conv2d_pallas(x, w, m=m, pad=pad, fused=fused)
+    raise ValueError(f"unknown algorithm {algorithm!r}")
+
+
+def conv1d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    algorithm: str = "auto",
+    m: int = 4,
+) -> jax.Array:
+    """1-D convolution, NWC x WIO -> NWC.  Winograd F(m, r) when eligible."""
+    r = w.shape[0]
+    if algorithm == "auto":
+        algorithm = "winograd" if (stride == 1 and 2 <= r <= 7) else "direct"
+    if algorithm == "direct":
+        return wg.direct_conv1d(x, w, pad=pad, stride=stride)
+    assert stride == 1
+    return wg.winograd_conv1d_reference(x, w, m, pad=pad)

@@ -1,0 +1,25 @@
+"""Target-hardware constants (TPU v5e) used by blocking + roofline models.
+
+The container executes on CPU; these constants describe the *target* the
+kernels and the dry-run roofline are modeled against (assignment spec):
+
+  peak bf16 matmul     : 197 TFLOP/s per chip
+  HBM bandwidth        : 819 GB/s per chip
+  ICI link bandwidth   : ~50 GB/s per link
+  VMEM                 : ~128 MiB per core; we budget conservatively.
+"""
+
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s per chip
+PEAK_FLOPS_F32 = PEAK_FLOPS_BF16 / 2  # MXU f32 rate is half of bf16
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+VMEM_BYTES = 128 * 2**20
+VMEM_BUDGET = int(VMEM_BYTES * 0.5)   # conservative usable share for one kernel
+
+MXU_DIM = 128                     # systolic array edge
+SUBLANE = 8                       # f32 sublane tile
+LANE = 128                        # lane tile
+
+# single-pod / multi-pod mesh shapes used throughout
+POD_MESH = (16, 16)               # ("data", "model") = 256 chips
+MULTIPOD_MESH = (2, 16, 16)       # ("pod", "data", "model") = 512 chips

@@ -1,0 +1,95 @@
+"""Tile extraction / output assembly for the overlap-add (OLA) Winograd scheme.
+
+The paper's transform kernels read overlapping (m+r-1)^2 input tiles straight
+from the strided NCHW image using register-reuse schedules (Fig. 2).  Pallas
+``BlockSpec``s cannot express overlapping HBM blocks, so on TPU we realize the
+same dataflow as an explicit *tile extraction* gather (XLA handles it as a
+copy/gather at HBM bandwidth), after which every kernel sees dense,
+non-overlapping blocks.  This is the hardware adaptation recorded in
+DESIGN.md SS2/SS8; the r-1 halo duplication factor is (m+r-1)^2 / m^2.
+
+Layout convention is NHWC (TPU-native; channels map to the 128-wide lane
+dimension, exactly the role the paper gives its theta-channel vectors).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def num_tiles_1d(out_len: int, m: int) -> int:
+    return -(-out_len // m)  # ceil
+
+
+def conv_out_len(in_len: int, r: int, pad: int) -> int:
+    return in_len + 2 * pad - r + 1
+
+
+def pad_for_tiles(x: jax.Array, m: int, r: int, pad: int) -> tuple[jax.Array, int, int, int, int]:
+    """Pad NHWC ``x`` so that (H,W) cover a whole number of m x m output tiles.
+
+    Returns (padded, tH, tW, P, Q) where (P, Q) is the true conv output size.
+    """
+    N, H, W, C = x.shape
+    P = conv_out_len(H, r, pad)
+    Q = conv_out_len(W, r, pad)
+    tH = num_tiles_1d(P, m)
+    tW = num_tiles_1d(Q, m)
+    alpha = m + r - 1
+    want_h = tH * m + r - 1
+    want_w = tW * m + r - 1
+    x = jnp.pad(
+        x,
+        ((0, 0), (pad, want_h - H - pad), (pad, want_w - W - pad), (0, 0)),
+    )
+    del alpha
+    return x, tH, tW, P, Q
+
+
+def extract_tiles(x_padded: jax.Array, m: int, r: int, tH: int, tW: int) -> jax.Array:
+    """(N, H', W', C) -> (N, tH, tW, alpha, alpha, C) overlapping tile gather."""
+    alpha = m + r - 1
+    idx_h = np.arange(tH)[:, None] * m + np.arange(alpha)[None, :]  # (tH, alpha)
+    idx_w = np.arange(tW)[:, None] * m + np.arange(alpha)[None, :]  # (tW, alpha)
+    # gather rows then cols; XLA lowers these to efficient gathers/copies
+    x = jnp.take(x_padded, jnp.asarray(idx_h.reshape(-1)), axis=1)
+    x = x.reshape(x.shape[0], tH, alpha, *x.shape[2:])  # (N,tH,alpha,W',C)
+    x = jnp.take(x, jnp.asarray(idx_w.reshape(-1)), axis=3)
+    x = x.reshape(x.shape[0], tH, alpha, tW, alpha, x.shape[-1])
+    return jnp.transpose(x, (0, 1, 3, 2, 4, 5))  # (N,tH,tW,alpha,alpha,C)
+
+
+def flatten_tiles(tiles: jax.Array) -> jax.Array:
+    """(N, tH, tW, a, a, C) -> (T, a, a, C) with T = N*tH*tW (paper's xi)."""
+    N, tH, tW, a, a2, C = tiles.shape
+    return tiles.reshape(N * tH * tW, a, a2, C)
+
+
+def assemble_output(y: jax.Array, N: int, tH: int, tW: int, P: int, Q: int) -> jax.Array:
+    """(T, m, m, K) -> (N, P, Q, K): inverse OLA (non-overlapping) + crop."""
+    T, m, m2, K = y.shape
+    y = y.reshape(N, tH, tW, m, m2, K)
+    y = jnp.transpose(y, (0, 1, 3, 2, 4, 5)).reshape(N, tH * m, tW * m2, K)
+    return y[:, :P, :Q, :]
+
+
+# ------------------------------ 1-D variant ------------------------------
+# Used by the Whisper conv frontend (k=3, stride 1): the one assigned arch
+# where the paper's technique applies natively (DESIGN.md SSArch-applicability).
+
+def pad_for_tiles_1d(x: jax.Array, m: int, r: int, pad: int) -> tuple[jax.Array, int, int]:
+    N, Tlen, C = x.shape
+    P = Tlen + 2 * pad - r + 1
+    t = num_tiles_1d(P, m)
+    want = t * m + r - 1
+    x = jnp.pad(x, ((0, 0), (pad, want - Tlen - pad), (0, 0)))
+    return x, t, P
+
+
+def extract_tiles_1d(x_padded: jax.Array, m: int, r: int, t: int) -> jax.Array:
+    alpha = m + r - 1
+    idx = np.arange(t)[:, None] * m + np.arange(alpha)[None, :]
+    x = jnp.take(x_padded, jnp.asarray(idx.reshape(-1)), axis=1)
+    return x.reshape(x.shape[0], t, alpha, x.shape[-1])  # (N, t, alpha, C)

@@ -1,0 +1,235 @@
+"""Winograd minimal-filtering transform matrices, generated exactly.
+
+The paper takes its transform matrices from ``wincnn`` (Lavin's Cook-Toom
+generator).  We regenerate them from first principles with exact rational
+arithmetic (``fractions.Fraction``) so that
+
+  * F(2x2,3x3) and F(6x6,3x3) match the paper's Eq. (5) (up to the per-row
+    sign freedom of minimal bilinear algorithms -- see note below),
+  * arbitrary F(m, r) are available (F(4,3) is used as a beyond-paper
+    operating point), and
+  * the fp32 constants used inside the Pallas kernels are correctly-rounded
+    from exact rationals rather than copied by hand.
+
+Construction (transposed Toom-Cook / CRT, the classic derivation):
+
+With ``alpha = m + r - 1`` evaluation points ``p_0 .. p_{alpha-2}`` plus the
+point at infinity:
+
+  * ``B^T`` (alpha x alpha) -- input transform.  Row ``i < alpha-1`` holds the
+    ascending coefficients of ``P_i(x) = prod_{k != i} (x - p_k)``;
+    the last row holds the coefficients of ``M(x) = prod_k (x - p_k)``.
+  * ``G`` (alpha x r) -- filter transform.  Row ``i < alpha-1`` is the
+    Vandermonde evaluation ``[p_i^j]_j`` scaled by ``1 / N_i`` with
+    ``N_i = prod_{k != i}(p_i - p_k)``; the last row is ``e_{r-1}``.
+  * ``A^T`` (m x alpha) -- output transform.  ``A^T[i, j] = p_j^i`` for
+    ``j < alpha-1``; the infinity column is ``e_{m-1}``.
+
+For any scaling ``s_i != 0``, scaling row ``i`` of ``B^T`` by ``s_i`` and row
+``i`` of ``G`` by ``1/s_i`` leaves the algorithm invariant (the element-wise
+product channel is bilinear); published matrices differ from each other only
+by such row signs.  ``tests/test_transforms.py`` checks both exactness of the
+algorithm and row-proportionality to the paper's Eq. (5).
+
+Note: the provided text of the paper's Eq. (5) shows
+``B_{6,3}^T`` row 1 as ``[0,1,1,-17/4,+17/4,1,1,0]`` and row 3 as
+``[0,-1/2,1/4,-5/2,-5/4,2,1,0]``; exact expansion of the corresponding
+Lagrange numerators (``x(x+1)(x^2-4)(x^2-1/4)`` resp.
+``x(x^2-1)(x+2)(x^2-1/4)``) gives ``-17/4`` at row 1 col 4 and ``+1/2`` at
+row 3 col 1 -- matching the canonical wincnn/ncnn matrices.  We treat those
+two entries as transcription typos and use the exact values; the test suite
+asserts |B^T_ours| == |B^T_paper| entry-wise plus exactness of the algorithm.
+"""
+
+from __future__ import annotations
+
+import functools
+from fractions import Fraction
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+# Canonical evaluation-point sequence (wincnn's default ordering): grow by
+# magnitude, alternating sign, mixing reciprocals to keep the transform
+# constants small (good for fp32 conditioning -- Lavin & Gray Sec. 5).
+_CANONICAL_POINTS: tuple[Fraction, ...] = tuple(
+    Fraction(n, d)
+    for (n, d) in [
+        (0, 1),
+        (1, 1), (-1, 1),
+        (2, 1), (-2, 1),
+        (1, 2), (-1, 2),
+        (4, 1), (-4, 1),
+        (1, 4), (-1, 4),
+        (8, 1), (-8, 1),
+    ]
+)
+
+
+class WinogradTransform(NamedTuple):
+    """Exact + fp transform matrices for F(m, r)."""
+
+    m: int
+    r: int
+    alpha: int
+    # exact rationals, as object arrays of Fraction
+    AT_exact: np.ndarray  # (m, alpha)
+    G_exact: np.ndarray   # (alpha, r)
+    BT_exact: np.ndarray  # (alpha, alpha)
+
+    @property
+    def L(self) -> int:
+        """Winograd-domain tuple count for the 2-D algorithm (paper's L)."""
+        return self.alpha * self.alpha
+
+    def as_float(self, dtype=np.float32) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        return (
+            _frac_to_float(self.AT_exact, dtype),
+            _frac_to_float(self.G_exact, dtype),
+            _frac_to_float(self.BT_exact, dtype),
+        )
+
+
+def _frac_to_float(arr: np.ndarray, dtype) -> np.ndarray:
+    out = np.empty(arr.shape, dtype=np.float64)
+    flat_in = arr.reshape(-1)
+    flat_out = out.reshape(-1)
+    for i, v in enumerate(flat_in):
+        flat_out[i] = float(v)
+    return out.astype(dtype)
+
+
+def _poly_mul(a: Sequence[Fraction], b: Sequence[Fraction]) -> list[Fraction]:
+    out = [Fraction(0)] * (len(a) + len(b) - 1)
+    for i, ai in enumerate(a):
+        if ai == 0:
+            continue
+        for j, bj in enumerate(b):
+            out[i + j] += ai * bj
+    return out
+
+
+def _poly_from_roots(roots: Sequence[Fraction]) -> list[Fraction]:
+    """Ascending coefficients of prod (x - root)."""
+    poly = [Fraction(1)]
+    for rt in roots:
+        poly = _poly_mul(poly, [-rt, Fraction(1)])
+    return poly
+
+
+def winograd_points(alpha: int) -> tuple[Fraction, ...]:
+    """The ``alpha - 1`` finite evaluation points for F(m, r), m+r-1=alpha."""
+    n_finite = alpha - 1
+    if n_finite > len(_CANONICAL_POINTS):
+        raise ValueError(
+            f"F(m,r) with alpha={alpha} needs {n_finite} points; only "
+            f"{len(_CANONICAL_POINTS)} canonical points are defined"
+        )
+    return _CANONICAL_POINTS[:n_finite]
+
+
+@functools.lru_cache(maxsize=None)
+def cook_toom(m: int, r: int) -> WinogradTransform:
+    """Generate exact Winograd/Cook-Toom matrices for F(m, r)."""
+    if m < 1 or r < 2:
+        raise ValueError(f"F(m={m}, r={r}) requires m >= 1, r >= 2")
+    alpha = m + r - 1
+    pts = winograd_points(alpha)
+    n_finite = alpha - 1
+
+    F0 = Fraction(0)
+    F1 = Fraction(1)
+
+    # B^T : (alpha, alpha)
+    BT = np.full((alpha, alpha), F0, dtype=object)
+    for i in range(n_finite):
+        others = [pts[k] for k in range(n_finite) if k != i]
+        coeffs = _poly_from_roots(others)  # degree alpha-2 -> alpha-1 coeffs
+        for j, cj in enumerate(coeffs):
+            BT[i, j] = cj
+    m_coeffs = _poly_from_roots(list(pts))  # degree alpha-1 -> alpha coeffs
+    for j, cj in enumerate(m_coeffs):
+        BT[n_finite, j] = cj
+
+    # G : (alpha, r)
+    G = np.full((alpha, r), F0, dtype=object)
+    for i in range(n_finite):
+        Ni = F1
+        for k in range(n_finite):
+            if k != i:
+                Ni *= pts[i] - pts[k]
+        for j in range(r):
+            G[i, j] = (pts[i] ** j) / Ni
+    G[n_finite, r - 1] = F1
+
+    # A^T : (m, alpha)
+    AT = np.full((m, alpha), F0, dtype=object)
+    for i in range(m):
+        for j in range(n_finite):
+            AT[i, j] = pts[j] ** i
+    AT[m - 1, n_finite] = F1
+
+    return WinogradTransform(m=m, r=r, alpha=alpha, AT_exact=AT, G_exact=G, BT_exact=BT)
+
+
+@functools.lru_cache(maxsize=None)
+def transform_arrays(m: int, r: int, dtype_name: str = "float32"):
+    """(AT, G, BT) as float arrays, cached per (m, r, dtype)."""
+    tr = cook_toom(m, r)
+    return tr.as_float(np.dtype(dtype_name))
+
+
+def arithmetic_reduction_1d(m: int, r: int) -> float:
+    """Multiplication-count reduction of F(m, r) vs direct: m*r/(m+r-1)."""
+    return m * r / (m + r - 1)
+
+
+def arithmetic_reduction_2d(m: int, r: int) -> float:
+    """2-D reduction: (m*r)^2/(m+r-1)^2.  2.25x for F(2,3), 5.0625x for F(6,3)."""
+    return (m * r) ** 2 / (m + r - 1) ** 2
+
+
+def exact_correlation_check(m: int, r: int, rng: np.random.Generator | None = None) -> bool:
+    """Verify A^T[(G g) . (B^T d)] == valid correlation, in exact arithmetic."""
+    tr = cook_toom(m, r)
+    rng = rng or np.random.default_rng(0)
+    d = [Fraction(int(v)) for v in rng.integers(-9, 10, size=tr.alpha)]
+    g = [Fraction(int(v)) for v in rng.integers(-9, 10, size=r)]
+    # direct valid correlation
+    want = [sum(d[i + j] * g[j] for j in range(r)) for i in range(m)]
+    # winograd
+    Bd = [sum(tr.BT_exact[x, k] * d[k] for k in range(tr.alpha)) for x in range(tr.alpha)]
+    Gg = [sum(tr.G_exact[x, j] * g[j] for j in range(r)) for x in range(tr.alpha)]
+    prod = [Bd[x] * Gg[x] for x in range(tr.alpha)]
+    got = [sum(tr.AT_exact[i, x] * prod[x] for x in range(tr.alpha)) for i in range(m)]
+    return got == want
+
+
+# The paper's Eq. (5) matrices, for verification tests (row order as printed).
+PAPER_BT_2_3 = np.array(
+    [
+        [1, 0, -1, 0],
+        [0, 1, 1, 0],
+        [0, -1, 1, 0],
+        [0, -1, 0, 1],
+    ],
+    dtype=np.float64,
+)
+
+# Note: row index 1 as printed in the paper has a +17/4 at column 4; the
+# canonical wincnn matrix (and exact expansion of x(x+1)(x^2-4)(x^2-1/4))
+# gives -17/4.  We store the canonical value and the test checks
+# row-proportionality with an allowance flag for that single known typo.
+PAPER_BT_6_3 = np.array(
+    [
+        [1, 0, -21 / 4, 0, 21 / 4, 0, -1, 0],
+        [0, 1, 1, -17 / 4, -17 / 4, 1, 1, 0],
+        [0, -1, 1, 17 / 4, -17 / 4, -1, 1, 0],
+        [0, -1 / 2, 1 / 4, -5 / 2, -5 / 4, 2, 1, 0],
+        [0, 1 / 2, 1 / 4, 5 / 2, -5 / 4, -2, 1, 0],
+        [0, 2, 4, -5 / 2, -5, 1 / 2, 1, 0],
+        [0, -2, 4, 5 / 2, -5, -1 / 2, 1, 0],
+        [0, -1, 0, 21 / 4, 0, -21 / 4, 0, 1],
+    ],
+    dtype=np.float64,
+)

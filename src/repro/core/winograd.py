@@ -1,0 +1,200 @@
+"""Pure-JAX Winograd convolution (the algorithmic reference path).
+
+This module is the framework's *algorithm-level* implementation of the
+paper's method: the full pipeline Eq. (3)/(4) expressed with jnp/einsum so
+that (a) it is the oracle the Pallas kernels are validated against, (b) it is
+automatically differentiable (the transforms are linear maps, so XLA autodiff
+yields the exact transposed-Winograd backward pass), and (c) it runs
+anywhere.  The performance path (kernels/ops.py) implements the same
+contract with Pallas TPU kernels and a custom VJP that falls back to this
+module's transpose.
+
+Tensor conventions:
+  x : (N, H, W, C)  NHWC
+  w : (r, r, C, K)  HWIO
+  y : (N, P, Q, K)
+Winograd-domain:
+  V : (L, T, C)   transformed input   (L = alpha^2, T = N*tH*tW)
+  U : (L, C, K)   transformed filter
+  O^: (L, T, K)   GEMM result
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import tiles as tiling
+from .transforms import transform_arrays
+
+
+def _consts(m: int, r: int, dtype=jnp.float32):
+    AT, G, BT = transform_arrays(m, r, "float32")
+    return (
+        jnp.asarray(AT, dtype=dtype),
+        jnp.asarray(G, dtype=dtype),
+        jnp.asarray(BT, dtype=dtype),
+    )
+
+
+# --------------------------- stage primitives ---------------------------
+
+def input_transform(tiles: jax.Array, m: int, r: int) -> jax.Array:
+    """(T, alpha, alpha, C) -> V (L, T, C) :  V = B^T d B, vectorized over C.
+
+    The (x, y) Winograd coordinates are flattened into the leading L axis --
+    the paper's Eq. (4) coordinate collapse, which makes the GEMM stage an
+    L-batched matmul.
+    """
+    _, _, BT = _consts(m, r, tiles.dtype)
+    # d: (T, i, j, C);  V[x,y] = sum_ij BT[x,i] BT[y,j] d[i,j]
+    v = jnp.einsum("xi,tijc,yj->xytc", BT, tiles, BT)
+    a = BT.shape[0]
+    return v.reshape(a * a, *v.shape[2:])  # (L, T, C)
+
+
+def filter_transform(w: jax.Array, m: int, r: int) -> jax.Array:
+    """(r, r, C, K) -> U (L, C, K) : U = G g G^T."""
+    _, G, _ = _consts(m, r, w.dtype)
+    u = jnp.einsum("xi,ijck,yj->xyck", G, w, G)
+    a = G.shape[0]
+    return u.reshape(a * a, *u.shape[2:])
+
+
+def batched_gemm(V: jax.Array, U: jax.Array) -> jax.Array:
+    """O^[l] = V[l] @ U[l] -- the paper's Eq. (4) as an L-batched GEMM."""
+    return jnp.einsum("ltc,lck->ltk", V, U)
+
+
+def tewmm(V: jax.Array, U: jax.Array) -> jax.Array:
+    """Tuple-element-wise multiply (the NNPACK-style baseline): identical
+    math to :func:`batched_gemm` but expressed as broadcast-multiply +
+    reduction, i.e. Level-1-BLAS-shaped work with low arithmetic intensity.
+    Kept as a measured baseline (paper SS4.1)."""
+    return jnp.sum(V[:, :, :, None] * U[:, None, :, :], axis=2)
+
+
+def output_transform(O_hat: jax.Array, m: int, r: int) -> jax.Array:
+    """O^ (L, T, K) -> (T, m, m, K) : Y = A^T O^ A."""
+    AT, _, _ = _consts(m, r, O_hat.dtype)
+    a = m + r - 1
+    o = O_hat.reshape(a, a, *O_hat.shape[1:])  # (x, y, T, K)
+    return jnp.einsum("ix,xytk,jy->tijk", AT, o, AT)
+
+
+# --------------------------- full convolution ---------------------------
+
+def winograd_conv2d_reference(
+    x: jax.Array,
+    w: jax.Array,
+    m: int = 6,
+    *,
+    pad: int = 0,
+    use_tewmm: bool = False,
+    compute_dtype=jnp.float32,
+) -> jax.Array:
+    """Full Winograd convolution, pure jnp.  The framework oracle.
+
+    Computes cross-correlation (CNN convention), matching
+    ``jax.lax.conv_general_dilated`` with NHWC/HWIO and stride 1.
+    """
+    r = w.shape[0]
+    assert w.shape[0] == w.shape[1], "square filters only"
+    in_dtype = x.dtype
+    x = x.astype(compute_dtype)
+    w = w.astype(compute_dtype)
+
+    N, H, W, C = x.shape
+    xp, tH, tW, P, Q = tiling.pad_for_tiles(x, m, r, pad)
+    t6 = tiling.extract_tiles(xp, m, r, tH, tW)
+    d = tiling.flatten_tiles(t6)                        # (T, a, a, C)
+    V = input_transform(d, m, r)                        # (L, T, C)
+    U = filter_transform(w, m, r)                       # (L, C, K)
+    O_hat = tewmm(V, U) if use_tewmm else batched_gemm(V, U)
+    y = output_transform(O_hat, m, r)                   # (T, m, m, K)
+    out = tiling.assemble_output(y, N, tH, tW, P, Q)
+    return out.astype(in_dtype)
+
+
+def direct_conv2d(x: jax.Array, w: jax.Array, *, pad: int = 0, stride: int = 1) -> jax.Array:
+    """Ground-truth direct convolution (paper's accuracy reference)."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def im2col_conv2d(x: jax.Array, w: jax.Array, *, pad: int = 0) -> jax.Array:
+    """im2col + single GEMM baseline (classic GEMM convolution)."""
+    r = w.shape[0]
+    N, H, W, C = x.shape
+    xp, tH, tW, P, Q = tiling.pad_for_tiles(x, 1, r, pad)
+    t6 = tiling.extract_tiles(xp, 1, r, tH, tW)  # m=1: every output position
+    d = t6.reshape(N * tH * tW, r * r * C)
+    y = d @ w.reshape(r * r * C, -1)
+    y = y.reshape(N, tH, tW, 1, 1, -1).reshape(N, tH, tW, -1)
+    return y[:, :P, :Q, :]
+
+
+# --------------------------- 1-D convolution ---------------------------
+
+def winograd_conv1d_reference(
+    x: jax.Array, w: jax.Array, m: int = 4, *, pad: int = 0
+) -> jax.Array:
+    """1-D Winograd convolution: x (N, T, C), w (r, C, K) -> (N, P, K).
+
+    Used for the Whisper conv frontend's stride-1 k=3 conv1d.
+    """
+    r = w.shape[0]
+    AT, G, BT = _consts(m, r, jnp.float32)
+    in_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    xp, t, P = tiling.pad_for_tiles_1d(x, m, r, pad)
+    d = tiling.extract_tiles_1d(xp, m, r, t)            # (N, t, alpha, C)
+    V = jnp.einsum("xi,ntic->xntc", BT, d)              # (alpha, N, t, C)
+    U = jnp.einsum("xi,ick->xck", G, w)                 # (alpha, C, K)
+    O_hat = jnp.einsum("xntc,xck->xntk", V, U)
+    y = jnp.einsum("mx,xntk->ntmk", AT, O_hat)          # (N, t, m, K)
+    y = y.reshape(x.shape[0], t * m, -1)[:, :P, :]
+    return y.astype(in_dtype)
+
+
+def direct_conv1d(x: jax.Array, w: jax.Array, *, pad: int = 0, stride: int = 1) -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride,),
+        padding=((pad, pad),),
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    )
+
+
+# ------------------------ workload bookkeeping ------------------------
+
+def conv_flops_direct(N, H, W, C, K, r, pad=0, stride=1) -> int:
+    P = (H + 2 * pad - r) // stride + 1
+    Q = (W + 2 * pad - r) // stride + 1
+    return 2 * N * P * Q * K * C * r * r
+
+
+def winograd_stage_flops(N, H, W, C, K, r, m, pad=0) -> dict:
+    """Per-stage FLOP counts for the Winograd pipeline (model for SSRoofline)."""
+    a = m + r - 1
+    L = a * a
+    P = H + 2 * pad - r + 1
+    Q = W + 2 * pad - r + 1
+    tH, tW = -(-P // m), -(-Q // m)
+    T = N * tH * tW
+    # dense-transform upper bound: 2*a*a*(a+a) muls/adds per tile per channel
+    in_tr = 2 * T * C * (a * a * a * 2)
+    f_tr = 2 * C * K * (a * r * (r + a))
+    gemm = 2 * L * T * C * K
+    out_tr = 2 * T * K * (a * m * (a + m))
+    return dict(input_transform=in_tr, filter_transform=f_tr, gemm=gemm,
+                output_transform=out_tr, total=in_tr + f_tr + gemm + out_tr,
+                T=T, L=L, effective_direct=conv_flops_direct(N, H, W, C, K, r, pad))

@@ -1,0 +1,6 @@
+from .pipeline import (  # noqa: F401
+    Prefetcher,
+    SyntheticImages,
+    SyntheticTokens,
+    host_slice,
+)

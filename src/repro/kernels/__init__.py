@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the Winograd pipeline (validated in interpret mode).
+
+Each kernel module pairs with an oracle in ``ref.py``; ``ops.py`` holds the
+jit'd wrappers that compose them into full convolutions.
+"""
+
+from .filter_transform import filter_transform  # noqa: F401
+from .input_transform import input_transform  # noqa: F401
+from .output_transform import output_transform  # noqa: F401
+from .wino_fused import wino_fused  # noqa: F401
+from .wino_gemm import wino_gemm  # noqa: F401

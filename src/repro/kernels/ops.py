@@ -1,0 +1,154 @@
+"""jit'd wrappers composing the Winograd Pallas kernels into full convs.
+
+Two pipelines, mirroring the paper's comparison:
+
+  * ``conv2d_pallas(..., fused=True)``  -- Algorithm 1: transforms fused
+    with packing, GEMM fused with the output transform (contribution C1).
+    O^ never exists in HBM.
+  * ``conv2d_pallas(..., fused=False)`` -- the three-stage baseline
+    (transform / GEMM / inverse-transform as separate HBM round trips),
+    i.e. the structure of the libraries the paper beats.
+
+Both consume the same extracted-tile layout and the same blocking model.
+Zero-padding of T/C/K up to block multiples replaces the paper's dual
+(alpha, eta) edge-case micro-kernels: on the MXU, ragged tails are handled
+by padding to (8, 128) alignment, and zero rows/columns pass through the
+bilinear algorithm exactly (DESIGN.md SS2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocking, tiles as tiling
+from repro.core.blocking import BlockConfig, round_up
+
+from . import common
+from .filter_transform import filter_transform
+from .input_transform import input_transform
+from .output_transform import output_transform
+from .wino_fused import wino_fused
+from .wino_gemm import wino_gemm
+
+
+def _pad_dims(T: int, C: int, K: int, cfg: BlockConfig) -> tuple[int, int, int]:
+    return (
+        round_up(T, cfg.block_t),
+        round_up(C, cfg.block_c),
+        round_up(K, cfg.block_k),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "pad", "fused", "interpret", "block_t", "block_c", "block_k"),
+)
+def conv2d_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    m: int = 6,
+    pad: int = 0,
+    fused: bool = True,
+    interpret: bool | None = None,
+    block_t: int | None = None,
+    block_c: int | None = None,
+    block_k: int | None = None,
+) -> jax.Array:
+    """Winograd convolution, Pallas path.  x (N,H,W,C), w (r,r,C,K) -> NHWC."""
+    r = w.shape[0]
+    assert w.shape[0] == w.shape[1]
+    a = m + r - 1
+    N, H, W, C = x.shape
+    K = w.shape[-1]
+
+    # ---- tile extraction (OLA) ----
+    xp, tH, tW, P, Q = tiling.pad_for_tiles(x, m, r, pad)
+    d = tiling.flatten_tiles(tiling.extract_tiles(xp, m, r, tH, tW))
+    T = d.shape[0]
+    d = d.reshape(T, a * a, C)
+
+    # ---- blocking (paper SS3.2.2 analogue) ----
+    elt = x.dtype.itemsize
+    cfg = blocking.choose_blocks(T, C, K, m, r, elt)
+    if block_t is not None or block_c is not None or block_k is not None:
+        cfg = BlockConfig(
+            block_t or cfg.block_t, block_c or cfg.block_c, block_k or cfg.block_k,
+            0, 0, 0,
+        )
+    Tp, Cp, Kp = _pad_dims(T, C, K, cfg)
+    d = common.pad_axis_to(common.pad_axis_to(d, 0, Tp), 2, Cp)
+    w_flat = w.reshape(r * r, C, K)
+    w_flat = common.pad_axis_to(common.pad_axis_to(w_flat, 1, Cp), 2, Kp)
+
+    # ---- transforms (packing fused in) ----
+    V = input_transform(d, m=m, r=r, block_t=cfg.block_t, block_c=cfg.block_c,
+                        interpret=interpret)
+    U = filter_transform(w_flat, m=m, r=r, block_c=cfg.block_c, block_k=cfg.block_k,
+                         interpret=interpret)
+
+    # ---- GEMM (+ fused inverse transform) ----
+    if fused:
+        y = wino_fused(
+            V, U, m=m, r=r,
+            block_t=cfg.block_t, block_k=cfg.block_k, block_c=cfg.block_c,
+            interpret=interpret, out_dtype=x.dtype,
+        )
+    else:
+        O_hat = wino_gemm(
+            V, U,
+            block_t=cfg.block_t, block_k=cfg.block_k, block_c=cfg.block_c,
+            interpret=interpret,
+        )
+        y = output_transform(
+            O_hat, m=m, r=r,
+            block_t=cfg.block_t, block_k=cfg.block_k,
+            interpret=interpret, out_dtype=x.dtype,
+        )
+
+    # ---- crop padding, assemble spatial output ----
+    y = y[:T, :, :K].reshape(T, m, m, K)
+    return tiling.assemble_output(y, N, tH, tW, P, Q)
+
+
+# --------------------- differentiable wrapper ---------------------
+#
+# The transforms are linear, so the exact backward pass is itself a Winograd
+# pipeline: dL/dx is a full-correlation with the channel-transposed,
+# 180deg-rotated filter -- which we run through the same fused Pallas path,
+# keeping the heavy data-gradient on the optimized kernels.  dL/dw uses the
+# canonical XLA filter-gradient convolution (a Winograd filter-side gradient
+# would need F(r, m) transforms; modeled in DESIGN.md SS8 as future work).
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def conv2d_pallas_ad(x: jax.Array, w: jax.Array, m: int, pad: int, fused: bool):
+    return conv2d_pallas(x, w, m=m, pad=pad, fused=fused)
+
+
+def _fwd(x, w, m, pad, fused):
+    return conv2d_pallas_ad(x, w, m, pad, fused), (x, w)
+
+
+def _bwd(m, pad, fused, res, gy):
+    x, w = res
+    r = w.shape[0]
+    # dx: full correlation of gy with rotated, C/K-swapped filter
+    w_rot = jnp.transpose(w[::-1, ::-1, :, :], (0, 1, 3, 2))  # (r, r, K, C)
+    dx = conv2d_pallas(gy, w_rot, m=m, pad=r - 1 - pad, fused=fused)
+    # dw: filter gradient via XLA's transposed convolution
+    _, vjp = jax.vjp(
+        lambda w_: jax.lax.conv_general_dilated(
+            x, w_, (1, 1), ((pad, pad), (pad, pad)),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ),
+        w,
+    )
+    (dw,) = vjp(gy)
+    return dx, dw
+
+
+conv2d_pallas_ad.defvjp(_fwd, _bwd)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Winograd Pallas kernel.
+
+Each function here defines the exact contract (shapes, layout, math) of the
+corresponding kernel in this package; ``tests/test_kernels.py`` sweeps
+shapes/dtypes asserting allclose between kernel and oracle.  The stage
+implementations live in ``repro.core.winograd`` -- these wrappers fix the
+kernel-facing layouts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import winograd as _wg
+
+
+def input_transform_ref(d_flat: jax.Array, m: int, r: int) -> jax.Array:
+    """d (T, alpha^2, C) -> V (L, T, C), f32 accumulate."""
+    a = m + r - 1
+    T, L_in, C = d_flat.shape
+    assert L_in == a * a
+    tiles = d_flat.reshape(T, a, a, C).astype(jnp.float32)
+    return _wg.input_transform(tiles, m, r).astype(d_flat.dtype)
+
+
+def filter_transform_ref(w_flat: jax.Array, m: int, r: int) -> jax.Array:
+    """w (r^2, C, K) -> U (L, C, K)."""
+    rr, C, K = w_flat.shape
+    assert rr == r * r
+    w = jnp.transpose(w_flat.reshape(r, r, C, K), (0, 1, 2, 3)).astype(jnp.float32)
+    return _wg.filter_transform(w, m, r).astype(w_flat.dtype)
+
+
+def wino_gemm_ref(V: jax.Array, U: jax.Array) -> jax.Array:
+    """V (L,T,C) x U (L,C,K) -> O^ (L,T,K), f32 accumulate."""
+    return jnp.einsum(
+        "ltc,lck->ltk",
+        V.astype(jnp.float32),
+        U.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def output_transform_ref(O_hat: jax.Array, m: int, r: int) -> jax.Array:
+    """O^ (L, T, K) -> y (T, m^2, K)."""
+    y = _wg.output_transform(O_hat.astype(jnp.float32), m, r)  # (T, m, m, K)
+    T, _, _, K = y.shape
+    return y.reshape(T, m * m, K).astype(O_hat.dtype)
+
+
+def wino_fused_ref(V: jax.Array, U: jax.Array, m: int, r: int) -> jax.Array:
+    """Fused GEMM + output transform: (L,T,C),(L,C,K) -> (T, m^2, K)."""
+    return output_transform_ref(wino_gemm_ref(V, U).astype(V.dtype), m, r)

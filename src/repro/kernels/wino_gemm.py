@@ -1,0 +1,72 @@
+"""Pallas kernel: L-batched Winograd-domain GEMM  O^[l] = V[l] @ U[l].
+
+The analogue of the paper's ping-pong GEMM micro-kernel (SS3.2, C4).  The
+NEON register double-buffering becomes the Pallas grid pipeline's automatic
+VMEM double-buffering; the (alpha=7, eta=8) register-tile search becomes the
+(block_t, block_k) MXU-tile choice (multiples of (8, 128), swept by the
+blocking model in ``repro.core.blocking``).  Accumulation over the C grid
+axis happens in the f32 output block, which stays resident in VMEM across
+the innermost grid dimension (the paper keeps the same T_blk x K_blk output
+block in L2 across the C loop -- Eq. (10)).
+
+This is the *non-fused* GEMM used by the three-stage baseline; the paper's
+contribution C1 (fused epilogue) lives in ``wino_fused.py``.
+
+Grid: (L, T/bt, K/bk, C/bc), C innermost.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import default_interpret
+
+
+def _kernel(v_ref, u_ref, o_ref):
+    c_idx = pl.program_id(3)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0, :, :] += jnp.dot(
+        v_ref[0, :, :], u_ref[0, :, :], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_t", "block_k", "block_c", "interpret")
+)
+def wino_gemm(
+    V: jax.Array,
+    U: jax.Array,
+    *,
+    block_t: int = 256,
+    block_k: int = 128,
+    block_c: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """V (L,T,C) x U (L,C,K) -> O^ (L,T,K) in f32."""
+    if interpret is None:
+        interpret = default_interpret()
+    L, T, C = V.shape
+    L2, C2, K = U.shape
+    assert L == L2 and C == C2
+    assert T % block_t == 0 and C % block_c == 0 and K % block_k == 0
+
+    grid = (L, T // block_t, K // block_k, C // block_c)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_c), lambda l, t, k, c: (l, t, c)),
+            pl.BlockSpec((1, block_c, block_k), lambda l, t, k, c: (l, c, k)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, block_k), lambda l, t, k, c: (l, t, k)),
+        out_shape=jax.ShapeDtypeStruct((L, T, K), jnp.float32),
+        interpret=interpret,
+    )(V, U)

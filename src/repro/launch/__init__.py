@@ -1,0 +1,2 @@
+# NOTE: deliberately empty -- importing repro.launch must not touch jax
+# device state (dryrun.py sets XLA_FLAGS before any jax import).

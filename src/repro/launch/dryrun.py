@@ -1,0 +1,176 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run driver (assignment deliverable e).
+#
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init).  This module is the ONLY place that forces
+# 512 host devices; smoke tests and benchmarks see the real device count.
+#
+# For every (arch x shape) cell:  build the workload, jit with explicit
+# in/out shardings, .lower().compile() against the production mesh,
+# print memory_analysis() (proves per-device footprint) and
+# cost_analysis() (FLOPs/bytes for the roofline), and extract collective
+# bytes from the post-SPMD HLO.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch chatglm3_6b --shape train_4k
+#   python -m repro.launch.dryrun --all --out results/dryrun.json
+#   python -m repro.launch.dryrun --all --multi-pod
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.launch.workloads import build_workload, lower_workload
+
+
+def _cost_dict(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(m, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool,
+             parallel_mode: str = "2d", verbose: bool = True) -> dict:
+    cfg = configs.get_config(arch)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if parallel_mode != "2d":
+        mesh_name += f"/{parallel_mode}"
+    base = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    reason = configs.skip_reason(cfg, shape)
+    if reason:
+        if verbose:
+            print(f"[dryrun] {arch} x {shape} x {mesh_name}: SKIP ({reason})")
+        return {**base, "status": "SKIP", "reason": reason}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    wl = build_workload(cfg, shape, mesh, parallel_mode=parallel_mode)
+    lowered = lower_workload(wl, mesh)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = _memory_dict(compiled)
+    cost = _cost_dict(compiled)
+    hlo = compiled.as_text()
+    bytes_per_device = (mem.get("argument_size_in_bytes", 0)
+                        + mem.get("temp_size_in_bytes", 0)
+                        + mem.get("output_size_in_bytes", 0)
+                        - mem.get("alias_size_in_bytes", 0))
+
+    from repro.launch.workloads import microbatches_for
+
+    rf = RL.analyze(
+        arch=arch, shape=shape, mesh_name=mesh_name, chips=chips,
+        hlo_text=hlo, cfg=cfg,
+        shape_spec=configs.SHAPES[shape], kind=wl.kind,
+        mem=mem, microbatches=microbatches_for(cfg, shape),
+        bytes_per_device=bytes_per_device,
+    )
+    row = {**base, "status": "OK", "kind": wl.kind,
+           "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+           "memory_analysis": mem,
+           "cost_analysis_flops_loop_blind": float(cost.get("flops", 0.0)),
+           **rf.row()}
+    if verbose:
+        gb = bytes_per_device / 2**30
+        print(f"[dryrun] {arch} x {shape} x {mesh_name}: OK "
+              f"({wl.kind}; {gb:.2f} GiB/dev; "
+              f"flops {rf.hlo_flops:.3e}; bytes {rf.hlo_bytes:.3e}; "
+              f"coll/dev {rf.coll_bytes/1e6:.1f} MB; "
+              f"bottleneck={rf.bottleneck}; "
+              f"roofline={rf.roofline_fraction*100:.1f}%; "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"         memory_analysis: {mem}")
+        print(f"         collectives: {rf.coll_ops}")
+    return row
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(configs.ARCHS))
+    ap.add_argument("--shape", default=None, choices=list(configs.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--mode", default="2d", choices=["2d", "dp", "tp", "auto"],
+                    help="parallel mode (logical mesh view; 'auto' = C6 "
+                         "selector per arch/shape)")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) cell")
+    ap.add_argument("--out", default=None, help="append JSON rows here")
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, (
+        "dry-run needs 512 placeholder devices; do not import jax before "
+        "this module sets XLA_FLAGS")
+
+    archs = list(configs.ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(configs.SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    rows, failures = [], []
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    if args.mode == "auto":
+                        from repro.launch.workloads import choose_lm_mode
+                        mode = choose_lm_mode(configs.get_config(arch), shape)
+                    else:
+                        mode = args.mode
+                    rows.append(run_cell(arch, shape, multi_pod=multi_pod,
+                                         parallel_mode=mode))
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape, multi_pod, repr(e)))
+                    rows.append({"arch": arch, "shape": shape,
+                                 "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+                                 "status": "FAIL", "error": repr(e)})
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        keyed = {(r["arch"], r["shape"], r["mesh"]): r for r in existing}
+        for r in rows:
+            keyed[(r["arch"], r["shape"], r["mesh"])] = r
+        with open(args.out, "w") as f:
+            json.dump(list(keyed.values()), f, indent=1)
+        print(f"[dryrun] wrote {len(rows)} rows -> {args.out}")
+
+    ok = sum(r["status"] == "OK" for r in rows)
+    skip = sum(r["status"] == "SKIP" for r in rows)
+    print(f"[dryrun] done: {ok} OK, {skip} SKIP, {len(failures)} FAIL")
+    for f in failures:
+        print("  FAIL:", f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,299 @@
+"""Loop-aware static cost extraction from post-SPMD HLO text.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, which silently
+undercounts every scanned structure (layer scans, microbatch accumulation,
+flash-attention chunk loops) by its trip count.  This module re-walks the
+HLO with loop multiplicities:
+
+  1. parse every computation block and its ops;
+  2. build the call graph (while body/condition [x trip count], fusion
+     ``calls=``, ``to_apply=``, conditional branches);
+  3. recover while trip counts from the ROOT compare of each condition
+     region (induction-from-zero pattern XLA emits for lax.scan/fori);
+  4. flops  = sum over computations of multiplicity x dot flops
+     (2 * result_elems * contracted_elems, batch dims included);
+  5. memory = sum over top-level (non-fusion-body) materializing ops of
+     multiplicity x result bytes x 2 (write + subsequent read) -- an HBM
+     traffic *proxy*, stated as such in EXPERIMENTS.md;
+  6. collective wire bytes by kind, with ring-factor weights, x multiplicity.
+
+Everything is derived from the compiled dry-run artifact -- no wall-clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_COLL_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_COLLECTIVES = tuple(_COLL_FACTOR)
+
+# ops whose results we count as HBM-materialized at top level
+_MATERIALIZING = {
+    "fusion", "dot", "convolution", "gather", "scatter", "copy",
+    "transpose", "broadcast", "dynamic-update-slice", "dynamic-slice",
+    "concatenate", "reshape", "reduce", "select-and-scatter", "pad",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "slice", "iota", "convert", "bitcast-convert",
+}
+_NO_TRAFFIC = {"bitcast", "parameter", "get-tuple-element", "tuple",
+               "constant", "after-all", "custom-call"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+
+
+def _parse_def(line: str) -> tuple[str, str, str] | None:
+    """(name, result_type, opcode) for an op-definition line, else None.
+
+    Handles tuple result types containing `/*index=N*/` comments and
+    layout braces by balancing parentheses instead of regexing the type.
+    """
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    rest = line[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        else:
+            return None
+        rtype, tail = rest[: i + 1], rest[i + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype, tail = rest[:sp], rest[sp:]
+    om = re.match(r"\s+([\w\-]+)\(", tail)
+    if not om:
+        return None
+    return m.group(1), rtype, om.group(1)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_CALL_ATTR_RE = re.compile(
+    r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"%([\w.\-]+)\s*=\s*s32\[\]\s+constant\((\d+)\)")
+_COMPARE_RE = re.compile(
+    r"ROOT\s+%[\w.\-]+\s*=\s*pred\[\]\s+compare\(([^)]*)\)")
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    """Total (elems, bytes) over all arrays in a (possibly tuple) type."""
+    elems = byts = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _first_shape_dims(shape_str: str) -> list[int] | None:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result_type: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    raw: list
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and "{" in line and "=" not in line.split("{")[0].split("(")[0]:
+                cur = Computation(m.group(1), [], [])
+            continue
+        if line.strip().startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        cur.raw.append(line)
+        dm = _parse_def(line)
+        if dm:
+            cur.ops.append(Op(dm[0], dm[2], dm[1], line))
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Recover the loop bound from the condition region's ROOT compare."""
+    consts = dict(_CONST_RE.findall("\n".join(cond.raw)))
+    for line in cond.raw:
+        m = _COMPARE_RE.search(line)
+        if m:
+            for operand in m.group(1).split(","):
+                name = operand.strip().lstrip("%")
+                if name in consts:
+                    return int(consts[name])
+    # fall back: any s32 constant in the region (scan bounds), else 1
+    if consts:
+        return max(int(v) for v in consts.values())
+    return 1
+
+
+def _entry_name(comps: dict[str, Computation], hlo: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    return max(comps, key=lambda c: len(comps[c].ops))
+
+
+def multiplicities(comps: dict[str, Computation], entry: str) -> dict[str, float]:
+    """Execution count per computation, loop trips included."""
+    mult: dict[str, float] = defaultdict(float)
+
+    def visit(name: str, m: float, depth=0):
+        if name not in comps or depth > 64:
+            return
+        mult[name] += m
+        comp = comps[name]
+        for op in comp.ops:
+            if op.opcode == "while":
+                refs = _CALL_ATTR_RE.findall(op.line)
+                body = cond = None
+                if "body=" in op.line:
+                    bm = re.search(r"body=%?([\w.\-]+)", op.line)
+                    cm = re.search(r"condition=%?([\w.\-]+)", op.line)
+                    body = bm.group(1) if bm else None
+                    cond = cm.group(1) if cm else None
+                trip = _trip_count(comps[cond]) if cond in comps else 1
+                if cond:
+                    visit(cond, m * (trip + 1), depth + 1)
+                if body:
+                    visit(body, m * trip, depth + 1)
+                del refs
+            else:
+                bm = _BRANCH_RE.search(op.line)
+                if bm:
+                    for b in bm.group(1).split(","):
+                        visit(b.strip().lstrip("%"), m, depth + 1)
+                else:
+                    for ref in _CALL_ATTR_RE.findall(op.line):
+                        visit(ref, m, depth + 1)
+
+    visit(entry, 1.0)
+    return dict(mult)
+
+
+def _dot_flops(op: Op, shapes: dict[str, str]) -> float:
+    res_dims = _first_shape_dims(op.result_type) or []
+    res_elems = 1
+    for d in res_dims:
+        res_elems *= d
+    # contracted extent from lhs shape + lhs_contracting_dims
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    args = re.search(r"dot\(\s*%?([\w.\-]+)", op.line)
+    contract = 1
+    if cm and args:
+        lhs_shape = shapes.get(args.group(1))
+        dims = _first_shape_dims(lhs_shape or "") or []
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                contract *= dims[int(idx)]
+    return 2.0 * res_elems * contract
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float                    # per-device, loop-aware
+    memory_bytes: float             # per-device HBM-traffic proxy
+    collective_bytes: float         # per-device wire bytes (ring-weighted)
+    collective_by_kind: dict
+    collective_ops: dict            # static op counts (pre-multiplicity)
+    dynamic_collectives: float      # multiplicity-weighted op count
+    while_loops: int
+
+
+def analyze_hlo(hlo: str) -> HloCosts:
+    comps = parse_computations(hlo)
+    entry = _entry_name(comps, hlo)
+    mult = multiplicities(comps, entry)
+
+    shapes: dict[str, str] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            shapes[op.name] = op.result_type
+        # parameters appear as ops too (parameter(N)); included above
+
+    flops = 0.0
+    mem = 0.0
+    coll = {k: 0.0 for k in _COLL_FACTOR}
+    coll_ops: dict[str, int] = defaultdict(int)
+    dyn_coll = 0.0
+    n_while = 0
+
+    # fusion computations: their dots count for flops at caller multiplicity
+    fusion_bodies = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                for ref in _CALL_ATTR_RE.findall(op.line):
+                    fusion_bodies.add(ref)
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        top_level = cname not in fusion_bodies
+        for op in comp.ops:
+            if op.opcode == "while":
+                n_while += 1
+            if op.opcode == "dot":
+                flops += m * _dot_flops(op, shapes)
+            base = op.opcode.replace("-start", "")
+            if base in _COLL_FACTOR and not op.opcode.endswith("-done"):
+                _, b = _shape_elems_bytes(op.result_type)
+                coll[base] += m * b * _COLL_FACTOR[base]
+                coll_ops[base] += 1
+                dyn_coll += m
+            if top_level and op.opcode in _MATERIALIZING:
+                _, b = _shape_elems_bytes(op.result_type)
+                mem += m * b * 2.0
+    return HloCosts(
+        flops=flops,
+        memory_bytes=mem,
+        collective_bytes=sum(coll.values()),
+        collective_by_kind=coll,
+        collective_ops=dict(coll_ops),
+        dynamic_collectives=dyn_coll,
+        while_loops=n_while,
+    )

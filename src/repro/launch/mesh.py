@@ -1,0 +1,32 @@
+"""Production mesh construction (assignment-fixed shapes).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state.
+
+  single pod : (16, 16)      axes ("data", "model")        = 256 chips
+  multi-pod  : (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+
+The "pod" axis is pure data parallelism (gradient all-reduce only crosses
+it); scaling to 1000+ nodes extends this axis -- nothing else in the
+sharding rules references its extent.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(*, dp: int | None = None, tp: int = 1):
+    """Mesh over whatever devices exist (tests / real runs on this host)."""
+    n = jax.device_count()
+    dp = dp or (n // tp)
+    assert dp * tp <= n, (dp, tp, n)
+    return jax.make_mesh((dp, tp), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

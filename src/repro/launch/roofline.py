@@ -1,0 +1,197 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (assignment formulas):
+
+  compute    = HLO_FLOPs       / (chips x 197e12 FLOP/s)
+  memory     = HLO_bytes       / (chips x 819e9  B/s)
+  collective = collective_bytes/ (chips x 50e9   B/s per link)
+
+``cost_analysis`` flops/bytes come back *per partition* for an SPMD-
+partitioned module, so they are first scaled to global by x chips (verified
+empirically in tests/test_roofline.py against a hand-counted matmul).
+
+collective_bytes is NOT in cost_analysis: we parse the post-SPMD HLO
+(``compiled.as_text()``) and sum the result-shape bytes of every collective
+op, weighted by the ring-algorithm wire factor:
+
+  all-reduce          2x  (reduce-scatter + all-gather phases)
+  all-gather          1x  (result bytes ~ gathered bytes received)
+  reduce-scatter      1x  (input bytes sent)
+  all-to-all          1x
+  collective-permute  1x
+
+Async pairs (``-start``/``-done``) are counted once (at ``-start``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+from repro.core import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-device wire bytes by collective kind (+ 'total')."""
+    out: dict[str, float] = {k: 0.0 for k in _COLL_FACTOR}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_str) * _COLL_FACTOR[kind]
+    out["total"] = sum(out.values())
+    return out
+
+
+def count_collective_ops(hlo_text: str) -> dict[str, int]:
+    out: dict[str, int] = {}
+    for m in _OP_RE.finditer(hlo_text):
+        out[m.group(2)] = out.get(m.group(2), 0) + 1
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # global
+    hlo_bytes: float            # global HBM traffic
+    coll_bytes: float           # per-device wire bytes
+    coll_by_kind: dict
+    coll_ops: dict
+    model_flops: float          # 6*N*D (train) / 2*N*D (inference)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bytes_per_device: int | None = None
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """model-FLOPs utilization at the bound: what fraction of the
+        machine's peak the *useful* math achieves if the step runs at the
+        dominant term's speed."""
+        peak_t = self.model_flops / (self.chips * hw.PEAK_FLOPS_BF16)
+        return peak_t / self.t_bound if self.t_bound else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_gflops": self.hlo_flops / 1e9,
+            "hlo_gbytes": self.hlo_bytes / 1e9,
+            "coll_mbytes_per_dev": self.coll_bytes / 1e6,
+            "t_compute_ms": self.t_compute * 1e3,
+            "t_memory_ms": self.t_memory * 1e3,
+            "t_collective_ms": self.t_collective * 1e3,
+            "bottleneck": self.bottleneck,
+            "model_gflops": self.model_flops / 1e9,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "coll_ops": self.coll_ops,
+            "bytes_per_device": self.bytes_per_device,
+        }
+
+
+def model_flops_for(cfg, shape_spec, kind: str) -> float:
+    """6*N*D for training, 2*N*D for inference forward (MoE: active N)."""
+    n_active = cfg.n_active_params()
+    if kind == "train":
+        tokens = shape_spec.batch * shape_spec.seq
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape_spec.batch * shape_spec.seq
+        return 2.0 * n_active * tokens
+    tokens = shape_spec.batch * 1
+    return 2.0 * n_active * tokens
+
+
+def hbm_traffic_bytes(mem: dict, *, kind: str, microbatches: int = 1) -> float:
+    """Per-device HBM traffic model from the compiled memory analysis.
+
+    argument bytes (params/opt/cache) are streamed once per pass: training
+    re-reads the weights on every microbatch forward AND backward (they do
+    not fit VMEM), plus one optimizer read+write; inference reads them
+    once.  Temporaries are written once and read once (x2).
+    """
+    args = mem.get("argument_size_in_bytes", 0)
+    temp = mem.get("temp_size_in_bytes", 0)
+    out = mem.get("output_size_in_bytes", 0)
+    passes = 2 * microbatches + 2 if kind == "train" else 1
+    return float(args) * passes + 2.0 * float(temp) + float(out)
+
+
+def analyze(
+    *, arch: str, shape: str, mesh_name: str, chips: int,
+    hlo_text: str, cfg, shape_spec, kind: str,
+    mem: dict | None = None, microbatches: int = 1,
+    bytes_per_device: int | None = None,
+) -> Roofline:
+    """Loop-aware roofline terms from the post-SPMD HLO (see hlo_costs)."""
+    from . import hlo_costs
+
+    hc = hlo_costs.analyze_hlo(hlo_text)
+    flops = hc.flops * chips            # per-partition -> global
+    byts = hbm_traffic_bytes(mem or {}, kind=kind,
+                             microbatches=microbatches) * chips
+    mf = model_flops_for(cfg, shape_spec, kind)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts,
+        coll_bytes=hc.collective_bytes,
+        coll_by_kind=hc.collective_by_kind,
+        coll_ops=hc.collective_ops,
+        model_flops=mf,
+        t_compute=flops / (chips * hw.PEAK_FLOPS_BF16),
+        t_memory=byts / (chips * hw.HBM_BW),
+        t_collective=hc.collective_bytes / hw.ICI_BW,
+        bytes_per_device=bytes_per_device,
+    )

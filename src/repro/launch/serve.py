@@ -1,0 +1,60 @@
+"""Serving CLI driver: batched generation with the ServeEngine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6_1_6b --smoke \\
+      --batch 4 --prompt-len 32 --new-tokens 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.mesh import make_host_mesh
+from repro.models.api import build
+from repro.serve import ServeEngine
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="chatglm3_6b", choices=list(configs.ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--tp", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    api = build(cfg)
+    mesh = make_host_mesh(tp=args.tp)
+    with jax.set_mesh(mesh):
+        params = api.init(jax.random.PRNGKey(0))
+        engine = ServeEngine(api, params,
+                             max_len=args.prompt_len + args.new_tokens)
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab)
+        extras = {}
+        if cfg.family == "audio":
+            extras["audio"] = jax.random.normal(
+                jax.random.PRNGKey(2),
+                (args.batch, cfg.encoder_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        t0 = time.perf_counter()
+        out = engine.generate(prompts, max_new_tokens=args.new_tokens,
+                              temperature=args.temperature, extras=extras)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+    n_tok = args.batch * args.new_tokens
+    print(f"[serve] {cfg.name}: generated {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s incl. compile)")
+    print("[serve] sample:", out[0][:16].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,150 @@
+"""Unified model API: one build/forward/loss/serve surface over all families.
+
+``build(cfg)`` dispatches on ``cfg.family`` and returns a ``ModelApi`` whose
+members close over the config:
+
+  init(key) -> params
+  forward(params, batch) -> (logits, aux)
+  loss(params, batch) -> (scalar loss, metrics dict)
+  init_cache(batch_size, max_len) -> cache
+  prefill(params, batch, cache) -> (last logits, cache)
+  decode_step(params, token, cache) -> (logits, cache)
+
+Batch contract (all jnp arrays):
+  LM families : {"tokens": (B,S) i32, "labels": (B,S) i32}
+  vlm         : + {"patch_embeds": (B,n_img,d), "positions": (3,B,S)}
+  audio       : + {"audio": (B,enc_len,d) frame embeddings (stub frontend)}
+
+The loss is token-mean cross-entropy in fp32 over the *real* vocab columns
+(the table may be zero-padded to ``vocab_eff`` for TP; padded logits are
+sliced off so normalization is exact), plus the MoE aux loss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import mamba, rwkv, transformer, whisper
+from .config import ModelConfig
+
+Params = dict[str, Any]
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab: int) -> jax.Array:
+    """Mean token CE, fp32, sharding-friendly.
+
+    The vocab axis may be TP-sharded and zero-padded to ``vocab_eff``:
+    padded columns are masked with an iota compare (slicing would break the
+    sharding), and the gold logit is extracted with an iota==label select
+    (take_along_axis over a sharded axis makes XLA replicate the logits).
+    Both reductions lower to a local reduce + a (B, S)-sized all-reduce.
+    """
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    if V != vocab:
+        logits = jnp.where(col < vocab, logits, -1e30)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    gold = jnp.sum(jnp.where(col == labels[..., None], logits, 0.0), axis=-1)
+    return jnp.mean(logz - gold)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable          # (params, batch, remat=True) -> (logits, aux)
+    init_cache: Callable       # (batch, max_len) -> cache
+    prefill: Callable          # (params, batch, cache) -> (logits, cache)
+    decode_step: Callable      # (params, token, cache) -> (logits, cache)
+
+    def loss(self, params: Params, batch: dict, remat: bool = True):
+        logits, aux = self.forward(params, batch, remat=remat)
+        ce = cross_entropy(logits, batch["labels"], self.cfg.vocab)
+        total = ce + self.cfg.router_aux_weight * aux
+        return total, {"loss": total, "ce": ce, "aux": aux}
+
+
+def _transformer_api(cfg: ModelConfig) -> ModelApi:
+    def fwd(params, batch, remat=True):
+        return transformer.forward(
+            params, cfg, batch["tokens"],
+            positions=batch.get("positions"),
+            patch_embeds=batch.get("patch_embeds"),
+            remat=remat,
+        )
+
+    def pre(params, batch, cache, long=False):
+        return transformer.prefill(params, cfg, batch["tokens"], cache,
+                                   transformer.cache_spec(cfg, long))
+
+    def dec(params, token, cache, long=False):
+        return transformer.decode_step(params, cfg, token, cache,
+                                       transformer.cache_spec(cfg, long))
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: transformer.init(cfg, key),
+        forward=fwd,
+        init_cache=lambda b, m: transformer.init_cache(cfg, b, m),
+        prefill=pre,
+        decode_step=dec,
+    )
+
+
+def _rwkv_api(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: rwkv.init(cfg, key),
+        forward=lambda p, b, remat=True: rwkv.forward(p, cfg, b["tokens"], remat=remat),
+        init_cache=lambda b, m: rwkv.init_cache(cfg, b, m),
+        prefill=lambda p, b, c, long=False: rwkv.prefill(p, cfg, b["tokens"], c),
+        decode_step=lambda p, t, c, long=False: rwkv.decode_step(p, cfg, t, c),
+    )
+
+
+def _mamba_api(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: mamba.init(cfg, key),
+        forward=lambda p, b, remat=True: mamba.forward(p, cfg, b["tokens"], remat=remat),
+        init_cache=lambda b, m: mamba.init_cache(cfg, b, m),
+        prefill=lambda p, b, c, long=False: mamba.prefill(p, cfg, b["tokens"], c),
+        decode_step=lambda p, t, c, long=False: mamba.decode_step(p, cfg, t, c),
+    )
+
+
+def _whisper_api(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: whisper.init(cfg, key),
+        forward=lambda p, b, remat=True: whisper.forward(
+            p, cfg, b["tokens"], b["audio"], remat=remat),
+        init_cache=lambda b, m: whisper.init_cache(cfg, b, m),
+        prefill=lambda p, b, c, long=False: whisper.prefill(
+            p, cfg, b["tokens"], c, audio=b.get("audio")),
+        decode_step=lambda p, t, c, long=False: whisper.decode_step(p, cfg, t, c),
+    )
+
+
+_FAMILY_BUILDERS = {
+    "dense": _transformer_api,
+    "moe": _transformer_api,
+    "vlm": _transformer_api,
+    "ssm": _rwkv_api,
+    "hybrid": _mamba_api,
+    "audio": _whisper_api,
+}
+
+
+def build(cfg: ModelConfig) -> ModelApi:
+    try:
+        return _FAMILY_BUILDERS[cfg.family](cfg)
+    except KeyError:
+        raise ValueError(f"no model builder for family {cfg.family!r}") from None

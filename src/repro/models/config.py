@@ -1,0 +1,189 @@
+"""Unified model configuration covering every assigned architecture family.
+
+One dataclass drives dense / MoE / SSM / hybrid / VLM / audio LM stacks plus
+the paper's CNNs; ``src/repro/configs/<arch>.py`` instantiate it with the
+exact published dimensions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio", "cnn"]
+RopeMode = Literal["full", "half", "mrope", "none"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family = "dense"
+
+    # transformer backbone
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab: int = 1024
+    head_dim: int | None = None          # defaults to d_model // n_heads
+    mlp: Literal["swiglu", "geglu", "gelu", "relu"] = "swiglu"
+    norm: Literal["rmsnorm", "layernorm"] = "rmsnorm"
+    rope_mode: RopeMode = "full"
+    rope_theta: float = 10_000.0
+    mrope_sections: tuple[int, int, int] = (16, 24, 24)
+    tie_embeddings: bool = False
+
+    # gemma2-style extras
+    sliding_window: int | None = None     # window size for local layers
+    local_global_alternate: bool = False  # even layers local, odd global
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    post_block_norm: bool = False         # gemma2 post-norms
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 2
+    d_ff_expert: int | None = None
+    n_shared_experts: int = 0
+    first_k_dense: int = 0                # leading dense layers (kimi-k2: 1)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # SSM / RWKV / Mamba
+    ssm_state: int = 64
+    ssm_conv_r: int = 4
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+
+    # hybrid (zamba2): shared attention block every `hybrid_period` layers
+    hybrid_period: int = 6
+
+    # encoder-decoder (whisper)
+    n_encoder_layers: int = 0
+    encoder_len: int = 1500               # whisper audio context (stub frontend)
+    frontend: Literal["stub", "conv"] = "stub"
+    mel_bins: int = 80
+
+    # vlm (qwen2-vl): stub patch-embedding frontend
+    num_image_tokens: int = 0
+
+    # numerics
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+
+    # tensor-parallel geometry.  ``head_pad`` rounds the *compute* head counts
+    # up to a multiple so they divide the mesh "model" axis (16); the padded
+    # heads have zero wq/wo (and zero wk/wv when kv is padded) so the math is
+    # exact.  Production configs set 16, smoke configs keep 1.
+    head_pad: int = 1
+    kv_head_pad: int = 1          # pad KV heads (whisper: 12 -> 16)
+    vocab_pad: int = 1            # round vocab up (TP-shardable unembed)
+
+    # attention chunking (flash-style online softmax); None = plain attention
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+
+    # optimizer selection hint for huge models (kimi-k2 -> "adafactor")
+    optimizer: str = "adamw"
+
+    # FSDP policy: shard params over "data" only when TP-sharding alone
+    # does not fit HBM (>=100B: mistral-large, kimi-k2); optimizer state is
+    # ZeRO-1-sharded over "data" by default (free capacity, grads reshard
+    # once per step, params re-gather once per step).
+    fsdp_params: bool = False
+    fsdp_opt: bool = True
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @staticmethod
+    def _round_up(x: int, mult: int) -> int:
+        return -(-x // mult) * mult
+
+    @property
+    def n_heads_eff(self) -> int:
+        """Compute-time Q-head count (zero-padded up for TP divisibility)."""
+        return self._round_up(self.n_heads, self.head_pad)
+
+    @property
+    def n_kv_heads_eff(self) -> int:
+        kv = self._round_up(self.n_kv_heads, self.kv_head_pad)
+        # group size must be integral: pad kv further if needed
+        while self.n_heads_eff % kv:
+            kv += 1
+        return kv
+
+    @property
+    def vocab_eff(self) -> int:
+        return self._round_up(self.vocab, self.vocab_pad)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def expert_ff(self) -> int:
+        return self.d_ff_expert or self.d_ff
+
+    def n_params(self) -> int:
+        """Approximate parameter count (embedding + blocks)."""
+        d, ff, hd = self.d_model, self.d_ff, self.head_dim
+        attn = d * hd * self.n_heads + 2 * d * hd * self.n_kv_heads + hd * self.n_heads * d
+        glu = self.mlp in ("swiglu", "geglu")
+        dense_mlp = d * ff * (3 if glu else 2)
+        if self.is_moe:
+            e_ff = self.expert_ff
+            moe_mlp = self.n_experts * d * e_ff * (3 if glu else 2) + d * self.n_experts
+            moe_mlp += self.n_shared_experts * d * e_ff * (3 if glu else 2)
+            n_moe = self.n_layers - self.first_k_dense
+            blocks = self.n_layers * attn + self.first_k_dense * dense_mlp + n_moe * moe_mlp
+        elif self.family == "ssm":
+            # rwkv6-ish: time-mix + channel-mix
+            blocks = self.n_layers * (4 * d * d + d * ff * 2)
+        elif self.family == "hybrid":
+            d_in = self.ssm_expand * d
+            mamba = 2 * d * d_in + d_in * d + d_in * self.ssm_state * 2
+            n_shared = -(-(self.n_layers) // self.hybrid_period)
+            blocks = self.n_layers * mamba + (attn + dense_mlp)  # shared block once
+            del n_shared
+        else:
+            blocks = self.n_layers * (attn + dense_mlp)
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        enc = self.n_encoder_layers * (attn + dense_mlp)
+        return blocks + emb + enc
+
+    def n_active_params(self) -> int:
+        """Active (per-token) parameters -- MoE counts top_k + shared experts."""
+        if not self.is_moe:
+            return self.n_params()
+        d = self.d_model
+        e_ff = self.expert_ff
+        glu = self.mlp in ("swiglu", "geglu")
+        per_expert = d * e_ff * (3 if glu else 2)
+        full = self.n_params()
+        inactive = (self.n_layers - self.first_k_dense) * (
+            (self.n_experts - self.top_k) * per_expert
+        )
+        return full - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayerSpec:
+    """One conv layer of the paper's Table 1 benchmark networks."""
+    name: str
+    C: int
+    K: int
+    H: int
+    W: int
+    r: int = 3
+    pad: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    layers: tuple[ConvLayerSpec, ...]
+    n_classes: int = 1000
+    family: str = "cnn"

@@ -1,0 +1,338 @@
+"""Mamba-2 (SSD) blocks + the Zamba2 hybrid stack.
+
+Mamba-2 block (per layer):
+  in_proj -> [z (gate) | x | B | C | dt];  causal depthwise conv1d (width
+  ``ssm_conv_r``) over [x|B|C]; per-head scalar decay a_t = exp(dt_t * A);
+  state h in R^{N x hd} per head:
+
+      h_t = a_t h_{t-1} + (dt_t B_t) (x) x_t
+      y_t = C_t . h_t + D x_t
+
+  gated by silu(z), RMS-normed, out-projected.  The depthwise conv is NOT
+  Winograd-eligible (no channel reduction => no GEMM stage; see DESIGN.md
+  SSArch-applicability) and is computed directly.
+
+Two evaluation modes (tested equal): ``scan`` over time and a ``chunked``
+form with cumulative-decay matmuls (TPU-friendly: turns rank-1 updates into
+(chunk x chunk) MXU work).
+
+Zamba2 hybrid: ``n_layers`` Mamba-2 layers with ONE weight-shared
+attention+MLP transformer block applied after every ``hybrid_period``
+layers (13 invocations for 81 layers, period 6).  The shared block's KV
+caches (one per invocation) ride through the outer scan as stacked leaves.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import constrain
+
+from . import layers as L
+from .config import ModelConfig
+
+Params = dict[str, Any]
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_ch = d_in + 2 * N
+    return d_in, H, N, conv_ch
+
+
+# --------------------------------- init ---------------------------------
+
+def _mamba_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_in, H, N, conv_ch = _dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": L._dense_init(ks[0], (d, 2 * d_in + 2 * N + H), dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_r, conv_ch), jnp.float32)
+                   * (1.0 / cfg.ssm_conv_r) ** 0.5),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "ln_y": jnp.ones((d_in,), jnp.float32),
+        "w_out": L._dense_init(ks[2], (d_in, d), dt, d_in),
+    }
+
+
+def _block_init(key, cfg: ModelConfig) -> Params:
+    return {"ln": L.norm_init(cfg.d_model, cfg), "mamba": _mamba_init(key, cfg)}
+
+
+def _shared_block_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln_attn": L.norm_init(cfg.d_model, cfg),
+        "attn": L.attn_init(ks[0], cfg),
+        "ln_mlp": L.norm_init(cfg.d_model, cfg),
+        "mlp": L.mlp_init(ks[1], cfg),
+    }
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    k_emb, k_blocks, k_tail, k_shared = jax.random.split(key, 4)
+    period = cfg.hybrid_period
+    n_periods = cfg.n_layers // period
+    tail = cfg.n_layers % period
+    stacked = jax.vmap(jax.vmap(lambda k: _block_init(k, cfg)))(
+        jax.random.split(k_blocks, n_periods * period).reshape(n_periods, period, 2)
+    )
+    p: Params = {
+        "embed": L.embed_init(k_emb, cfg),
+        "periods": stacked,                      # (n_periods, period, ...)
+        "shared": _shared_block_init(k_shared, cfg),
+        "ln_final": L.norm_init(cfg.d_model, cfg),
+    }
+    if tail:
+        p["tail"] = jax.vmap(lambda k: _block_init(k, cfg))(
+            jax.random.split(k_tail, tail))
+    return p
+
+
+# ------------------------------ SSD core ------------------------------
+
+def _ssd_scan(x, dtB, a, C, h0):
+    """x (B,S,H,hd), dtB (B,S,H,N), a (B,S,H), C (B,S,N), h0 (B,H,N,hd)."""
+    def step(h, xs):
+        xt, dtBt, at, Ct = xs
+        h = at[..., None, None] * h + jnp.einsum("bhn,bhp->bhnp", dtBt, xt)
+        y = jnp.einsum("bn,bhnp->bhp", Ct, h) if Ct.ndim == 2 else \
+            jnp.einsum("bhn,bhnp->bhp", Ct, h)
+        return h, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (x, dtB, a, C))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def _ssd_chunked(x, dtB, a, C, h0, chunk: int):
+    """Chunked SSD; identical math to _ssd_scan (see module docstring)."""
+    B, S, H, hd = x.shape
+    N = dtB.shape[-1]
+    n = S // chunk
+    xc = x.reshape(B, n, chunk, H, hd)
+    bc = dtB.reshape(B, n, chunk, H, N)
+    ac = a.reshape(B, n, chunk, H)
+    cc = C.reshape(B, n, chunk, N)
+
+    def chunk_step(h, xs):
+        xb, bb, ab, cb = xs                              # (B,chunk,...)
+        loga = jnp.log(jnp.maximum(ab, 1e-38))           # (B,chunk,H)
+        cum = jnp.cumsum(loga, axis=1)                   # inclusive
+        dec_in = jnp.exp(cum)                            # prod_{1..t}
+        # state term: y_state[t] = C_t . (dec_in[t] h)
+        y_state = jnp.einsum("btn,bthnp->bthp",
+                             cb, dec_in[..., None, None] * h[:, None])
+        # intra-chunk: D[t,s] = dec_in[t]/dec_in[s] (s <= t), per head
+        inv = jnp.exp(-cum)
+        cb_h = jnp.einsum("btn,bshn->bhts", cb, bb)      # (C_t . dtB_s)
+        D = dec_in.transpose(0, 2, 1)[:, :, :, None] * \
+            inv.transpose(0, 2, 1)[:, :, None, :]        # (B,H,t,s)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        att_m = jnp.where(causal[None, None], cb_h * D, 0.0)
+        y_intra = jnp.einsum("bhts,bshp->bthp", att_m, xb)
+        # state update
+        dec_all = dec_in[:, -1]                          # (B,H)
+        dec_after = jnp.exp(cum[:, -1][:, None] - cum)   # prod_{s+1..end}
+        kv = jnp.einsum("bshn,bshp->bhnp", bb * dec_after[..., None], xb)
+        h1 = dec_all[..., None, None] * h + kv
+        return h1, y_intra + y_state
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xc, bc, ac, cc))
+    h, ys = jax.lax.scan(chunk_step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).reshape(B, S, H, hd), h
+
+
+def _causal_conv(x, w, b, state):
+    """Depthwise causal conv1d.  x (B,S,ch), w (r,ch); state (B,r-1,ch)."""
+    r = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], r - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(r))
+    new_state = xp[:, -(r - 1):] if r > 1 else state
+    return out + b, new_state.astype(jnp.float32)
+
+
+def mamba_block(p: Params, x: jax.Array, cfg: ModelConfig, state: dict | None,
+                chunk: int | None):
+    """x (B,S,d) -> (out, new_state {conv: (B,r-1,ch), ssm: (B,H,N,hd)})."""
+    B, S, d = x.shape
+    d_in, H, N, conv_ch = _dims(cfg)
+    hd = cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xi, Bm, Cm, dt_raw = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    z = constrain(z, "batch", None, "model")
+    xi = constrain(xi, "batch", None, "model")
+
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    conv_out, conv_state1 = _causal_conv(
+        conv_in, p["conv_w"].astype(conv_in.dtype), p["conv_b"].astype(conv_in.dtype),
+        conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xi, Bm, Cm = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                               # decay
+    # SSD heads carry the "model" axis (d_in/hd = 112 heads for zamba2,
+    # divisible by TP=16); states match cache_shardings' "ssm" rule
+    xh = xi.reshape(B, S, H, hd).astype(jnp.float32)
+    xh = constrain(xh, "batch", None, "model", None)
+    dtB = dt[..., None] * Bm[:, :, None, :].astype(jnp.float32)       # (B,S,H,N)
+    dtB = constrain(dtB, "batch", None, "model", None)
+    a = constrain(a, "batch", None, "model")
+    h0 = (jnp.zeros((B, H, N, hd), jnp.float32) if state is None
+          else state["ssm"])
+    h0 = constrain(h0, "batch", "model", None, None)
+    Cf = Cm.astype(jnp.float32)
+    if chunk is not None and S % chunk == 0 and S > chunk:
+        y, h1 = _ssd_chunked(xh, dtB, a, Cf, h0, chunk)
+    else:
+        y, h1 = _ssd_scan(xh, dtB, a, Cf, h0)
+    y = y + p["D"][None, None, :, None] * xh
+    y = constrain(y, "batch", None, "model", None)
+    y = y.reshape(B, S, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = constrain(y, "batch", None, "model")
+    # RMS norm on the gated output
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * p["ln_y"]
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["w_out"])
+    return out, {"conv": conv_state1, "ssm": h1}
+
+
+def _shared_apply(p: Params, x, cfg: ModelConfig, *, positions, cache=None):
+    h = L.apply_norm(p["ln_attn"], x, cfg)
+    attn_out, new_cache = L.attention(p["attn"], h, cfg, positions=positions,
+                                      cache=cache)
+    x = x + attn_out
+    h = L.apply_norm(p["ln_mlp"], x, cfg)
+    x = x + L.apply_mlp(p["mlp"], h, cfg)
+    return x, new_cache
+
+
+# ------------------------------- forward -------------------------------
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            positions=None, remat: bool = True, chunk: int | None = 64):
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = L.embed(params["embed"], tokens, cfg).astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, "batch", None, None)
+    shared = params["shared"]
+
+    def mamba_body(x, lp):
+        out, _ = mamba_block(lp["mamba"], L.apply_norm(lp["ln"], x, cfg), cfg,
+                             None, chunk)
+        return x + out, None
+
+    def period_body(x, lp):
+        x, _ = jax.lax.scan(mamba_body, x, lp)
+        x, _ = _shared_apply(shared, x, cfg, positions=positions)
+        x = constrain(x, "batch", None, None)
+        return x, None
+
+    if remat:
+        period_body = jax.checkpoint(period_body)
+        mamba_body_r = jax.checkpoint(mamba_body)
+    else:
+        mamba_body_r = mamba_body
+    x, _ = jax.lax.scan(period_body, x, params["periods"])
+    if "tail" in params:
+        x, _ = jax.lax.scan(mamba_body_r, x, params["tail"])
+    x = L.apply_norm(params["ln_final"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, jnp.float32(0.0)
+
+
+# -------------------------------- serving --------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    d_in, H, N, conv_ch = _dims(cfg)
+    hd = cfg.ssm_head_dim
+    period = cfg.hybrid_period
+    n_periods = cfg.n_layers // period
+    tail = cfg.n_layers % period
+    r = cfg.ssm_conv_r
+
+    def mstate(n):
+        return {
+            "conv": jnp.zeros((n, batch, r - 1, conv_ch), jnp.float32),
+            "ssm": jnp.zeros((n, batch, H, N, hd), jnp.float32),
+        }
+
+    kv_shape = (n_periods, batch, max_len, cfg.n_kv_heads_eff, cfg.head_dim)
+    cache = {
+        "pos": jnp.int32(0),
+        "periods": {
+            "mamba": jax.tree_util.tree_map(
+                lambda z: z.reshape(n_periods, period, *z.shape[1:]),
+                mstate(n_periods * period)),
+            "attn_k": jnp.zeros(kv_shape, jnp.dtype(cfg.dtype)),
+            "attn_v": jnp.zeros(kv_shape, jnp.dtype(cfg.dtype)),
+        },
+    }
+    if tail:
+        cache["tail"] = mstate(tail)
+    return cache
+
+
+def _forward_cached(params, cfg, tokens, cache, chunk):
+    B, S = tokens.shape
+    pos0 = cache["pos"]
+    positions = pos0 + jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = L.embed(params["embed"], tokens, cfg).astype(jnp.dtype(cfg.dtype))
+    shared = params["shared"]
+
+    def mamba_body(x, xs):
+        lp, st = xs
+        out, st1 = mamba_block(lp["mamba"], L.apply_norm(lp["ln"], x, cfg), cfg,
+                               st, chunk)
+        return x + out, st1
+
+    def period_body(x, xs):
+        lp, mst, kc, vc = xs
+        x, mst1 = jax.lax.scan(mamba_body, x, (lp, mst))
+        lc = {"k": kc, "v": vc, "pos": pos0}
+        x, nc = _shared_apply(shared, x, cfg, positions=positions, cache=lc)
+        return x, (mst1, nc["k"], nc["v"])
+
+    x, (mst1, k1, v1) = jax.lax.scan(
+        period_body, x,
+        (params["periods"], cache["periods"]["mamba"],
+         cache["periods"]["attn_k"], cache["periods"]["attn_v"]))
+    new_cache = {
+        "pos": pos0 + S,
+        "periods": {"mamba": mst1, "attn_k": k1, "attn_v": v1},
+    }
+    if "tail" in params:
+        x, tst1 = jax.lax.scan(
+            mamba_body, x, (params["tail"], cache["tail"]))
+        new_cache["tail"] = tst1
+    x = L.apply_norm(params["ln_final"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, chunk: int | None = 64):
+    logits, cache = _forward_cached(params, cfg, tokens, cache, chunk)
+    return logits[:, -1, :], cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache):
+    logits, cache = _forward_cached(params, cfg, token, cache, None)
+    return logits[:, -1, :], cache

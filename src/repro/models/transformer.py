@@ -1,0 +1,295 @@
+"""Decoder-only transformer LM stack (dense / MoE / VLM families).
+
+One implementation drives chatglm3, gemma2, mistral-large, phi4-mini,
+qwen2-vl (M-RoPE), phi3.5-moe and kimi-k2:
+
+  * layers stacked with ``jax.lax.scan`` over parameter pytrees whose leaves
+    carry a leading (n_layers,) axis -- keeps HLO size O(1) in depth for the
+    88-layer / 61-layer dry-runs; optional ``jax.checkpoint`` remat;
+  * per-layer static features (gemma2 local/global alternation) ride along
+    as scanned flag arrays so the scan body stays uniform;
+  * GQA attention with sliding window / softcap / RoPE variants from
+    ``layers.py``; MoE blocks from ``moe.py`` (kimi's leading dense layers
+    run outside the scan);
+  * decode path carries a stacked KV cache through the same scan.
+
+Activation sharding: batch -> ("pod","data"), heads/ff/experts -> "model"
+(see parallel/sharding.py).  The KV cache spec is workload-dependent
+(sequence-sharded for long-context decode) and is threaded through
+``init_cache``/``decode_step``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import constrain
+
+from . import layers as L
+from . import moe as MOE
+from .config import ModelConfig
+
+Params = dict[str, Any]
+_BIG = jnp.int32(1 << 30)
+
+
+# --------------------------------- init ---------------------------------
+
+def _block_init(key, cfg: ModelConfig, moe: bool) -> Params:
+    ks = jax.random.split(key, 6)
+    p = {
+        "ln_attn": L.norm_init(cfg.d_model, cfg),
+        "attn": L.attn_init(ks[0], cfg),
+        "ln_mlp": L.norm_init(cfg.d_model, cfg),
+    }
+    if moe:
+        p["moe"] = MOE.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = L.mlp_init(ks[1], cfg)
+    if cfg.post_block_norm:
+        p["ln_attn_post"] = L.norm_init(cfg.d_model, cfg)
+        p["ln_mlp_post"] = L.norm_init(cfg.d_model, cfg)
+    return p
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    k_emb, k_dense, k_blocks, k_out = jax.random.split(key, 4)
+    n_scan = cfg.n_layers - cfg.first_k_dense
+    # vmapped init gives stacked (n_scan, ...) leaves for the scan
+    blocks = jax.vmap(
+        lambda k: _block_init(k, cfg, moe=cfg.is_moe)
+    )(jax.random.split(k_blocks, n_scan))
+    p: Params = {
+        "embed": L.embed_init(k_emb, cfg),
+        "blocks": blocks,
+        "ln_final": L.norm_init(cfg.d_model, cfg),
+    }
+    if cfg.first_k_dense:
+        p["dense_blocks"] = [
+            _block_init(k, cfg, moe=False)
+            for k in jax.random.split(k_dense, cfg.first_k_dense)
+        ]
+    return p
+
+
+def _remat_block(n: int) -> int:
+    """Largest divisor of n not exceeding ~sqrt(n) (nested-scan remat)."""
+    if n < 16:
+        return 1
+    target = int(n ** 0.5) + 1
+    for k in range(target, 1, -1):
+        if n % k == 0:
+            return k
+    return 1
+
+
+def layer_windows(cfg: ModelConfig, n: int) -> jax.Array:
+    """Per-layer effective window (int32; _BIG = global attention)."""
+    if cfg.sliding_window is None:
+        return jnp.full((n,), _BIG, jnp.int32)
+    if not cfg.local_global_alternate:
+        return jnp.full((n,), cfg.sliding_window, jnp.int32)
+    idx = jnp.arange(n)
+    return jnp.where(idx % 2 == 0, jnp.int32(cfg.sliding_window), _BIG)
+
+
+# ------------------------------- forward -------------------------------
+
+def _block_apply(p: Params, x, cfg: ModelConfig, *, positions, window, cache=None):
+    h = L.apply_norm(p["ln_attn"], x, cfg)
+    attn_out, new_cache = L.attention(
+        p["attn"], h, cfg, positions=positions, window=window, cache=cache
+    )
+    if cfg.post_block_norm:
+        attn_out = L.apply_norm(p["ln_attn_post"], attn_out, cfg)
+    x = x + attn_out
+    h = L.apply_norm(p["ln_mlp"], x, cfg)
+    if "moe" in p:
+        mlp_out, aux = MOE.apply_moe(p["moe"], h, cfg)
+    else:
+        mlp_out, aux = L.apply_mlp(p["mlp"], h, cfg), jnp.float32(0.0)
+    if cfg.post_block_norm:
+        mlp_out = L.apply_norm(p["ln_mlp_post"], mlp_out, cfg)
+    return x + mlp_out, aux, new_cache
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    positions: jax.Array | None = None,
+    patch_embeds: jax.Array | None = None,
+    remat: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Training/eval forward: tokens (B, S) -> (logits (B,S,V), aux_loss).
+
+    VLM (qwen2-vl): ``patch_embeds`` (B, n_img, d) from the stub vision
+    frontend replace the embeddings of the first n_img positions; M-RoPE
+    t/h/w coordinates arrive via ``positions`` with shape (3, B, S).
+    """
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = L.embed(params["embed"], tokens, cfg).astype(jnp.dtype(cfg.dtype))
+    if patch_embeds is not None:
+        n_img = patch_embeds.shape[1]
+        x = jnp.concatenate(
+            [patch_embeds.astype(x.dtype), x[:, n_img:]], axis=1)
+    x = constrain(x, "batch", None, None)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+
+    aux_total = jnp.float32(0.0)
+    for dp in params.get("dense_blocks", []):
+        x, aux, _ = _block_apply(dp, x, cfg, positions=positions, window=None)
+        aux_total += aux
+
+    n_scan = cfg.n_layers - cfg.first_k_dense
+    windows = layer_windows(cfg, n_scan)
+
+    def body(carry, scanned):
+        x, aux_acc = carry
+        lp, win = scanned
+        x, aux, _ = _block_apply(lp, x, cfg, positions=positions, window=win)
+        x = constrain(x, "batch", None, None)
+        return (x, aux_acc + aux), None
+
+    # sqrt-remat: nested scan saves the residual-stream carry only every
+    # `blk` layers (outer checkpoint), recomputing the inner layers during
+    # backward.  Cuts the stacked (n_layers, B, S, d) carry -- and XLA's
+    # hoisted f32 copy of it -- by ~sqrt(n_layers) (mistral-large train:
+    # 24.8 GiB of carry stacks -> 3.1 GiB) for one extra inner forward.
+    blk = _remat_block(n_scan) if remat else 1
+    if remat and blk > 1:
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_scan // blk, blk, *a.shape[1:]),
+            (params["blocks"], windows))
+
+        def outer(carry, xs):
+            carry, _ = jax.lax.scan(body, carry, xs)
+            return carry, None
+
+        (x, aux_total), _ = jax.lax.scan(
+            jax.checkpoint(outer), (x, aux_total), grouped)
+    else:
+        if remat:
+            body = jax.checkpoint(body)
+        (x, aux_total), _ = jax.lax.scan(
+            body, (x, aux_total), (params["blocks"], windows))
+
+    x = L.apply_norm(params["ln_final"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    logits = constrain(logits, "batch", None, "model")
+    return logits, aux_total
+
+
+# -------------------------------- serving --------------------------------
+
+# Per-layer KV cache layout (B, Smax, KV, hd).  The spec MUST match the
+# launch-level cache shardings (parallel/specs.cache_shardings) or every
+# layer pays a cache reshard.  Batch always shards over ("pod","data");
+# the "model" axis goes to KV heads when they divide it, otherwise to the
+# SEQUENCE axis (flash-decoding-style split-K: per-rank partial attention
+# over an S-chunk, combined by the softmax all-reduce) -- the layout that
+# keeps GQA archs with 2-8 KV heads sharded 256-ways.
+DEFAULT_CACHE_SPEC = ("batch", None, "model", None)
+SEQ_CACHE_SPEC = ("batch", "model", None, None)
+# long-context decode (B=1): shard the sequence axis over the whole mesh
+LONG_CACHE_SPEC = (None, ("pod", "data", "model"), None, None)
+
+
+def cache_spec(cfg: ModelConfig, long: bool = False) -> tuple:
+    from repro.parallel import axis_size
+
+    if long:
+        return LONG_CACHE_SPEC
+    tp = axis_size("model")
+    if tp > 1 and cfg.n_kv_heads_eff % tp != 0:
+        return SEQ_CACHE_SPEC
+    return DEFAULT_CACHE_SPEC
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    n_scan = cfg.n_layers - cfg.first_k_dense
+    kv_shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    dt = jnp.dtype(cfg.dtype)
+
+    def mk(n):
+        return {
+            "k": jnp.zeros((n, *kv_shape), dt),
+            "v": jnp.zeros((n, *kv_shape), dt),
+        }
+
+    cache = {"pos": jnp.int32(0), "layers": mk(n_scan)}
+    if cfg.first_k_dense:
+        cache["dense_layers"] = [mk(1) for _ in range(cfg.first_k_dense)]
+    return cache
+
+
+def _constrain_cache(kv: dict, spec: tuple) -> dict:
+    # kv leaves are per-layer (B, Smax, KV, hd) inside the scan body
+    return {
+        "k": constrain(kv["k"], *spec),
+        "v": constrain(kv["v"], *spec),
+    }
+
+
+def _forward_cached(params, cfg, tokens, cache, positions, spec):
+    """Shared prefill/decode body: writes cache at cache['pos']."""
+    x = L.embed(params["embed"], tokens, cfg).astype(jnp.dtype(cfg.dtype))
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    x = constrain(x, "batch", None, None)
+
+    pos0 = cache["pos"]
+    new_dense = []
+    for dp, dc in zip(params.get("dense_blocks", []), cache.get("dense_layers", [])):
+        lc = {"k": dc["k"][0], "v": dc["v"][0], "pos": pos0}
+        x, _, nc = _block_apply(dp, x, cfg, positions=positions, window=None, cache=lc)
+        new_dense.append({"k": nc["k"][None], "v": nc["v"][None]})
+
+    n_scan = cfg.n_layers - cfg.first_k_dense
+    windows = layer_windows(cfg, n_scan)
+
+    def body(x, scanned):
+        lp, win, kv = scanned
+        lc = {"k": kv["k"], "v": kv["v"], "pos": pos0}
+        x, _, nc = _block_apply(lp, x, cfg, positions=positions, window=win, cache=lc)
+        x = constrain(x, "batch", None, None)
+        return x, _constrain_cache({"k": nc["k"], "v": nc["v"]}, spec)
+
+    x, new_kv = jax.lax.scan(
+        body, x, (params["blocks"], windows, cache["layers"])
+    )
+    x = L.apply_norm(params["ln_final"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+
+    new_cache = {"pos": pos0 + tokens.shape[1], "layers": new_kv}
+    if cfg.first_k_dense:
+        new_cache["dense_layers"] = new_dense
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: dict,
+            spec: tuple = DEFAULT_CACHE_SPEC):
+    """tokens (B, S_prompt) -> (last-position logits (B, V), cache)."""
+    B, S = tokens.shape
+    positions = cache["pos"] + jnp.broadcast_to(
+        jnp.arange(S, dtype=jnp.int32)[None], (B, S)
+    )
+    logits, cache = _forward_cached(params, cfg, tokens, cache, positions, spec)
+    return logits[:, -1, :], cache
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: dict,
+                spec: tuple = DEFAULT_CACHE_SPEC):
+    """token (B, 1) -> (logits (B, V), cache).  One new token vs full cache."""
+    B = token.shape[0]
+    positions = jnp.broadcast_to(cache["pos"][None, None], (B, 1)).astype(jnp.int32)
+    logits, cache = _forward_cached(params, cfg, token, cache, positions, spec)
+    return logits[:, -1, :], cache

@@ -1,0 +1,235 @@
+"""Whisper-style encoder-decoder audio LM (backbone per assignment).
+
+Per the assignment the modality frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings (B, enc_len, d_model) and the encoder
+runs bidirectional self-attention over them.  A real conv frontend
+(``frontend="conv"``) is also implemented because its stride-1 k=3 conv1d is
+the one place in the assigned pool where the paper's Winograd technique
+applies natively (see DESIGN.md SSArch-applicability): mel (B, frames, 80)
+-> conv1d k=3 s=1 [Winograd F(m,3) 1-D] -> GELU -> conv1d k=3 s=2 [direct]
+-> GELU -> +sinusoidal positions.
+
+Decoder: causal self-attention with KV cache + cross-attention to the
+encoder output (cross-K/V computed once at prefill) + GELU MLP.  Sinusoidal
+positions are used on both sides (the published model uses learned decoder
+positions capped at 448; sinusoids keep the backbone well-defined for the
+assigned 32k decode shape -- deviation recorded in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import constrain
+
+from . import layers as L
+from .config import ModelConfig
+
+Params = dict[str, Any]
+
+
+def sinusoid_pos(length: int, d: int, offset=0) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32) + offset
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    ang = pos[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------- init ---------------------------------
+
+def _enc_block_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln_attn": L.norm_init(cfg.d_model, cfg),
+        "attn": L.attn_init(ks[0], cfg),
+        "ln_mlp": L.norm_init(cfg.d_model, cfg),
+        "mlp": L.mlp_init(ks[1], cfg),
+    }
+
+
+def _dec_block_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln_self": L.norm_init(cfg.d_model, cfg),
+        "self_attn": L.attn_init(ks[0], cfg),
+        "ln_cross": L.norm_init(cfg.d_model, cfg),
+        "cross_attn": L.attn_init(ks[1], cfg),
+        "ln_mlp": L.norm_init(cfg.d_model, cfg),
+        "mlp": L.mlp_init(ks[2], cfg),
+    }
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    k_emb, k_enc, k_dec, k_conv = jax.random.split(key, 4)
+    p: Params = {
+        "embed": L.embed_init(k_emb, cfg),
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(k, cfg))(
+            jax.random.split(k_enc, cfg.n_encoder_layers)),
+        "ln_enc": L.norm_init(cfg.d_model, cfg),
+        "dec_blocks": jax.vmap(lambda k: _dec_block_init(k, cfg))(
+            jax.random.split(k_dec, cfg.n_layers)),
+        "ln_final": L.norm_init(cfg.d_model, cfg),
+    }
+    if cfg.frontend == "conv":
+        kc1, kc2 = jax.random.split(k_conv)
+        dt = jnp.dtype(cfg.param_dtype)
+        p["conv1_w"] = L._dense_init(kc1, (3, cfg.mel_bins, cfg.d_model), dt,
+                                     3 * cfg.mel_bins)
+        p["conv1_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["conv2_w"] = L._dense_init(kc2, (3, cfg.d_model, cfg.d_model), dt,
+                                     3 * cfg.d_model)
+        p["conv2_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+# -------------------------------- encoder --------------------------------
+
+def conv_frontend(params: Params, mel: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """mel (B, frames, mel_bins) -> (B, frames//2, d).  Stride-1 conv runs
+    through the Winograd 1-D path (the paper's technique, natively)."""
+    from repro.core import conv1d  # local import: core <-> models decoupling
+
+    x = conv1d(mel, params["conv1_w"], pad=1, algorithm="winograd")
+    x = jax.nn.gelu(x + params["conv1_b"].astype(x.dtype))
+    x = conv1d(x, params["conv2_w"], stride=2, pad=1, algorithm="direct")
+    x = jax.nn.gelu(x + params["conv2_b"].astype(x.dtype))
+    return x
+
+
+def encode(params: Params, cfg: ModelConfig, audio: jax.Array, *,
+           remat: bool = True) -> jax.Array:
+    """audio: frame embeddings (B, Senc, d) [stub] or mel (B, frames, mel)."""
+    if cfg.frontend == "conv" and audio.shape[-1] == cfg.mel_bins:
+        x = conv_frontend(params, audio, cfg)
+    else:
+        x = audio.astype(jnp.dtype(cfg.dtype))
+    B, S, d = x.shape
+    x = x + sinusoid_pos(S, d).astype(x.dtype)[None]
+    x = constrain(x, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, lp):
+        h = L.apply_norm(lp["ln_attn"], x, cfg)
+        a, _ = L.attention(lp["attn"], h, cfg, positions=positions, causal=False)
+        x = x + a
+        h = L.apply_norm(lp["ln_mlp"], x, cfg)
+        x = x + L.apply_mlp(lp["mlp"], h, cfg)
+        return constrain(x, "batch", None, None), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.apply_norm(params["ln_enc"], x, cfg)
+
+
+# -------------------------------- decoder --------------------------------
+
+def _cross_kv(params: Params, enc_out: jax.Array, cfg: ModelConfig):
+    """Precompute per-layer cross K/V from the encoder output (stacked)."""
+    def proj(lp):
+        k = jnp.einsum("bsd,dnh->bsnh", enc_out, lp["cross_attn"]["wk"])
+        v = jnp.einsum("bsd,dnh->bsnh", enc_out, lp["cross_attn"]["wv"])
+        return k, v
+
+    return jax.vmap(proj, in_axes=0)(params["dec_blocks"])
+
+
+def _dec_block(lp, x, cfg, *, positions, ck, cv, cache=None):
+    h = L.apply_norm(lp["ln_self"], x, cfg)
+    a, new_cache = L.attention(lp["self_attn"], h, cfg, positions=positions,
+                               cache=cache)
+    x = x + a
+    h = L.apply_norm(lp["ln_cross"], x, cfg)
+    a, _ = L.attention(lp["cross_attn"], h, cfg, positions=positions,
+                       cross_kv=(ck, cv))
+    x = x + a
+    h = L.apply_norm(lp["ln_mlp"], x, cfg)
+    x = x + L.apply_mlp(lp["mlp"], h, cfg)
+    return x, new_cache
+
+
+def decode_train(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                 enc_out: jax.Array, *, remat: bool = True):
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg).astype(jnp.dtype(cfg.dtype))
+    x = x + sinusoid_pos(S, cfg.d_model).astype(x.dtype)[None]
+    x = constrain(x, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    cks, cvs = _cross_kv(params, enc_out, cfg)
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        x, _ = _dec_block(lp, x, cfg, positions=positions, ck=ck, cv=cv)
+        return constrain(x, "batch", None, None), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, (params["dec_blocks"], cks, cvs))
+    x = L.apply_norm(params["ln_final"], x, cfg)
+    return L.unembed(params["embed"], x, cfg)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            audio: jax.Array, *, remat: bool = True):
+    """Training forward: (tokens, audio) -> (logits, aux)."""
+    enc_out = encode(params, cfg, audio, remat=remat)
+    logits = decode_train(params, cfg, tokens, enc_out, remat=remat)
+    return logits, jnp.float32(0.0)
+
+
+# -------------------------------- serving --------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    n = cfg.n_layers
+    kv_shape = (n, batch, max_len, cfg.n_kv_heads_eff, cfg.head_dim)
+    dt = jnp.dtype(cfg.dtype)
+    enc_len = cfg.encoder_len
+    return {
+        "pos": jnp.int32(0),
+        "k": jnp.zeros(kv_shape, dt),
+        "v": jnp.zeros(kv_shape, dt),
+        # cross K/V filled by prefill
+        "ck": jnp.zeros((n, batch, enc_len, cfg.n_kv_heads_eff, cfg.head_dim), dt),
+        "cv": jnp.zeros((n, batch, enc_len, cfg.n_kv_heads_eff, cfg.head_dim), dt),
+    }
+
+
+def _forward_cached(params, cfg, tokens, cache):
+    B, S = tokens.shape
+    pos0 = cache["pos"]
+    x = L.embed(params["embed"], tokens, cfg).astype(jnp.dtype(cfg.dtype))
+    x = x + sinusoid_pos(S, cfg.d_model, offset=pos0).astype(x.dtype)[None]
+    positions = pos0 + jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, xs):
+        lp, kv_k, kv_v, ck, cv = xs
+        lc = {"k": kv_k, "v": kv_v, "pos": pos0}
+        x, nc = _dec_block(lp, x, cfg, positions=positions, ck=ck, cv=cv, cache=lc)
+        return x, (nc["k"], nc["v"])
+
+    x, (k1, v1) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["ck"], cache["cv"]))
+    x = L.apply_norm(params["ln_final"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {**cache, "pos": pos0 + S, "k": k1, "v": v1}
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, audio=None):
+    """Encode audio (filling cross-KV), then prefill decoder tokens."""
+    if audio is not None:
+        enc_out = encode(params, cfg, audio)
+        ck, cv = _cross_kv(params, enc_out, cfg)
+        cache = {**cache, "ck": ck.astype(cache["ck"].dtype),
+                 "cv": cv.astype(cache["cv"].dtype)}
+    logits, cache = _forward_cached(params, cfg, tokens, cache)
+    return logits[:, -1, :], cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache):
+    logits, cache = _forward_cached(params, cfg, token, cache)
+    return logits[:, -1, :], cache

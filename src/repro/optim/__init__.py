@@ -1,0 +1,22 @@
+"""Optimizers (optax-free): AdamW, Adafactor, schedules, clipping,
+error-feedback gradient compression.
+
+Functional interface:  ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (new_params, new_state)``.
+All optimizer states inherit the parameter PartitionSpecs (same tree
+structure), so FSDP sharding extends to optimizer state (ZeRO-3-like).
+"""
+
+from .adamw import adamw  # noqa: F401
+from .adafactor import adafactor  # noqa: F401
+from .clip import clip_by_global_norm, global_norm  # noqa: F401
+from .compress import ef_compress_grads, ef_init  # noqa: F401
+from .schedule import constant, warmup_cosine  # noqa: F401
+
+
+def make_optimizer(name: str, lr, **kw):
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,82 @@
+"""Adafactor: factored second moments for matrices, O(n+m) state.
+
+For kimi-k2 (~1T params) full Adam state is 8-32 GB/chip on the production
+mesh; Adafactor's factored row/col statistics reduce optimizer HBM by ~4000x
+for the expert matrices.  Follows Shazeer & Stern (2018): factored v for
+ndim>=2 (over the last two axes), full v for vectors, update clipping by
+RMS, no first moment by default.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import Optimizer
+
+
+def adafactor(
+    lr,
+    *,
+    decay: float = 0.8,        # beta2 exponent: 1 - step^-decay
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+    min_dim_factored: int = 128,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_factored and \
+            p.shape[-2] >= min_dim_factored
+
+    def init(params):
+        def leaf(p):
+            if factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),          # row
+                    "vc": jnp.zeros((*p.shape[:-2], p.shape[-1]), jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"step": jnp.int32(0),
+                "v": jax.tree_util.tree_map(leaf, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        beta2 = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if factored(p):
+                vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                vhat = (vr[..., None] * vc[..., None, :]) / \
+                    jnp.maximum(denom[..., None], eps)
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vhat = beta2 * v["v"] + (1 - beta2) * g2
+                new_v = {"v": vhat}
+            u = g * jax.lax.rsqrt(jnp.maximum(vhat, eps))
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            pf = p.astype(jnp.float32)
+            new_p = pf - lr_t * (u + weight_decay * pf)
+            return new_p.astype(p.dtype), new_v
+
+        # state leaves are dicts, so flatten against the params treedef
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        new_p, new_v = [], []
+        for g, v, p in zip(flat_g, flat_v, flat_p):
+            np_, nv = upd(g, v, p)
+            new_p.append(np_)
+            new_v.append(nv)
+        return (jax.tree_util.tree_unflatten(tdef, new_p),
+                {"step": step, "v": jax.tree_util.tree_unflatten(tdef, new_v)})
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,78 @@
+"""AdamW with configurable moment dtype and decoupled weight decay.
+
+``state_dtype="bfloat16"`` halves optimizer HBM (used by the >100B dry-run
+configs); the update math is always fp32.  Parameters may be bf16 -- the
+update is computed in fp32 and cast back (the fp32 master-weight variant is
+``master=True``, which stores an fp32 copy in the state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]   # (grads, state, params) -> (params, state)
+
+
+def adamw(
+    lr: Callable | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    state_dtype: str = "float32",
+    master: bool = False,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+    sdt = jnp.dtype(state_dtype)
+
+    def init(params):
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, sdt), params)
+        state = {"step": jnp.int32(0), "m": zeros,
+                 "v": jax.tree_util.tree_map(jnp.copy, zeros)}
+        if master:
+            state["master"] = jax.tree_util.tree_map(
+                lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        b1t = 1 - b1 ** step.astype(jnp.float32)
+        b2t = 1 - b2 ** step.astype(jnp.float32)
+        ref = state["master"] if master else params
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m1 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v1 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+            mhat = m1 / b1t
+            vhat = v1 / b2t
+            pf = p.astype(jnp.float32)
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * pf
+            return pf - lr_t * delta, m1.astype(sdt), v1.astype(sdt)
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], ref)
+        new_ref = jax.tree_util.tree_map(lambda o: o[0], out,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        m1 = jax.tree_util.tree_map(lambda o: o[1], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        v1 = jax.tree_util.tree_map(lambda o: o[2], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree_util.tree_map(
+            lambda n, p: n.astype(p.dtype), new_ref, params)
+        new_state = {"step": step, "m": m1, "v": v1}
+        if master:
+            new_state["master"] = new_ref
+        return new_params, new_state
+
+    return Optimizer(init=init, update=update)

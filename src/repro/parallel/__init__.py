@@ -1,0 +1,7 @@
+from .sharding import (  # noqa: F401
+    act_batch_axes,
+    axis_size,
+    constrain,
+    param_pspecs,
+    shard_params,
+)

@@ -1,0 +1,231 @@
+"""Concrete sharding assembly for train / serve states on a real mesh.
+
+Everything here finalizes *divisibility-aware* NamedShardings: an axis
+assignment is dropped (-> replicated on that mesh axis) when the array
+dimension is not divisible by the mesh-axis extent.  That one rule handles
+every awkward case in the assigned pool -- kv=2 GQA heads under TP=16,
+B=1 long-context decode, 12-head whisper -- without per-arch special
+cases, and degrades to full replication on a 1-device test mesh.
+
+Builders:
+  * ``state_shardings``  -- TrainState (params via PARAM_RULES; AdamW m/v/
+    master inherit the param spec; Adafactor vr/vc inherit with the reduced
+    axis dropped; ef residuals inherit).
+  * ``batch_shardings``  -- tokens/labels/extras: batch axis -> ("pod","data").
+  * ``cache_shardings``  -- KV caches and recurrent states; ``long=True``
+    shards the *sequence* axis over every mesh axis (SP) instead of the
+    batch axis -- the layout that makes long_500k fit.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .sharding import PARAM_RULES, _spec_for_path, act_batch_axes
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def finalize(spec: P, shape: tuple[int, ...], mesh) -> NamedSharding:
+    """Expand pseudo-axes, drop non-divisible / missing assignments."""
+    names = set(mesh.axis_names)
+    out = []
+    for i, e in enumerate(spec):
+        if e == "batch":
+            e = tuple(a for a in ("pod", "data") if a in names) or None
+        if e == "fsdp":
+            e = "data" if "data" in names else None
+        if isinstance(e, (tuple, list)):
+            kept = tuple(a for a in e if a in names)
+            e = kept if kept else None
+        elif e is not None and e not in names:
+            e = None
+        if e is not None and i < len(shape):
+            if shape[i] % _axis_size(mesh, e) != 0:
+                # try single axes from a tuple before giving up
+                if isinstance(e, tuple):
+                    e = next((a for a in e if shape[i] % mesh.shape[a] == 0), None)
+                else:
+                    e = None
+        out.append(e)
+    # never assign one mesh axis twice
+    seen: set = set()
+    cleaned = []
+    for e in out:
+        axes = e if isinstance(e, tuple) else (e,) if e else ()
+        if any(a in seen for a in axes):
+            cleaned.append(None)
+        else:
+            seen.update(axes)
+            cleaned.append(e)
+    return NamedSharding(mesh, P(*cleaned))
+
+
+def params_shardings(params: Any, mesh, *, fsdp: bool = False) -> Any:
+    """Inference-path param shardings.  fsdp=False (default) drops the
+    "fsdp" (data-axis) entries: TP-only weights mean zero per-token weight
+    gathers during decode -- only >=100B archs pay the ZeRO-3 gather."""
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat[0]:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        spec = _spec_for_path(pstr, jnp.ndim(leaf), jnp.shape(leaf))
+        if not fsdp:
+            spec = _drop_fsdp(spec)
+        out.append(finalize(spec, jnp.shape(leaf), mesh))
+    return jax.tree_util.tree_unflatten(flat[1], out)
+
+
+def _param_spec_tree(params: Any) -> Any:
+    """Raw PartitionSpecs (pre-finalize) per param leaf."""
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat[0]:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append(_spec_for_path(pstr, jnp.ndim(leaf), jnp.shape(leaf)))
+    return jax.tree_util.tree_unflatten(flat[1], out)
+
+
+def _drop_fsdp(spec: P) -> P:
+    return P(*[None if e == "fsdp" else e for e in spec])
+
+
+def state_shardings(state: Any, mesh, *, fsdp_params: bool = False,
+                    fsdp_opt: bool = True) -> Any:
+    """Shardings for a TrainState(-shaped) pytree (arrays or SDS leaves).
+
+    fsdp_params: shard params over "data" (ZeRO-3; >=100B archs).  When
+    off, params are TP-sharded only -- no per-microbatch weight gathers.
+    fsdp_opt: shard optimizer moments/master copies over "data" (ZeRO-1).
+    """
+    params = state.params
+    pspecs = _param_spec_tree(params)
+    flat_specs_raw, tdef = jax.tree_util.tree_flatten(pspecs)
+    param_specs = (flat_specs_raw if fsdp_params
+                   else [_drop_fsdp(s) for s in flat_specs_raw])
+    opt_specs = (flat_specs_raw if (fsdp_opt or fsdp_params)
+                 else [_drop_fsdp(s) for s in flat_specs_raw])
+    flat_p = tdef.flatten_up_to(params)
+
+    def _like(tree, specs):
+        flat_t = tdef.flatten_up_to(tree)
+        return jax.tree_util.tree_unflatten(tdef, [
+            finalize(s, jnp.shape(t), mesh) for s, t in zip(specs, flat_t)
+        ])
+
+    def like_params(tree):
+        return _like(tree, param_specs)
+
+    def like_opt(tree):
+        return _like(tree, opt_specs)
+    flat_specs = opt_specs  # factored shardings derive from opt placement
+
+    def opt_shardings(opt_state):
+        out = {}
+        for k, v in opt_state.items():
+            if k == "step":
+                out[k] = NamedSharding(mesh, P())
+            elif k in ("m", "master"):
+                out[k] = like_opt(v)
+            elif k == "v":
+                # adamw "v" mirrors params; adafactor holds factored dicts
+                flat_v = tdef.flatten_up_to(v)
+                if flat_v and isinstance(flat_v[0], dict):
+                    out[k] = _factored_shardings(v)
+                else:
+                    out[k] = like_opt(v)
+            else:
+                out[k] = jax.tree_util.tree_map(
+                    lambda x: NamedSharding(mesh, P()), v)
+        return out
+
+    def _factored_shardings(vtree):
+        flat_v = tdef.flatten_up_to(vtree)
+        res = []
+        for s, leafdict in zip(flat_specs, flat_v):
+            entries = list(s) if len(s) else []
+            if "vr" in leafdict:
+                vr_spec = P(*entries[:-1]) if entries else P()
+                vc_spec = P(*(entries[:-2] + entries[-1:])) if len(entries) >= 2 else P()
+                res.append({
+                    "vr": finalize(vr_spec, jnp.shape(leafdict["vr"]), mesh),
+                    "vc": finalize(vc_spec, jnp.shape(leafdict["vc"]), mesh),
+                })
+            else:
+                res.append({"v": finalize(P(*entries), jnp.shape(leafdict["v"]), mesh)})
+        return jax.tree_util.tree_unflatten(tdef, res)
+
+    return state.__class__(
+        step=NamedSharding(mesh, P()),
+        params=like_params(params),
+        opt_state=opt_shardings(state.opt_state),
+        ef_residual=(like_params(state.ef_residual)
+                     if state.ef_residual is not None else None),
+    )
+
+
+def batch_shardings(batch: dict, mesh) -> dict:
+    """tokens/labels (B,S): batch->("pod","data").  positions (3,B,S): axis 1."""
+    out = {}
+    for k, v in batch.items():
+        shape = jnp.shape(v)
+        if k == "positions" and len(shape) == 3:
+            spec = P(None, "batch", None)
+        else:
+            spec = P(*(["batch"] + [None] * (len(shape) - 1)))
+        out[k] = finalize(spec, shape, mesh)
+    return out
+
+
+_KV_NAMES = {"k", "v", "attn_k", "attn_v", "ck", "cv"}
+
+
+def cache_shardings(cache: Any, mesh, *, long: bool = False) -> Any:
+    """KV caches: [..., B, S, KV, hd]; recurrent states by name.
+
+    long=True: shard the KV sequence axis over every mesh axis (SP) --
+    batch is 1 and cannot shard; the 500k cache can and must.
+    """
+    all_axes = tuple(mesh.axis_names)
+    flat = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in flat[0]:
+        name = str(getattr(path[-1], "key", getattr(path[-1], "idx", path[-1])))
+        shape = jnp.shape(leaf)
+        nd = len(shape)
+        lead = [None] * (nd - 4)
+        if name in _KV_NAMES and nd >= 4:
+            if long:
+                spec = P(*lead, None, all_axes, None, None)
+            elif shape[-2] % mesh.shape.get("model", 1) == 0:
+                # KV heads divide TP: shard heads (standard)
+                spec = P(*lead, "batch", None, "model", None)
+            else:
+                # few-KV-head GQA: shard the sequence axis instead
+                # (split-K decode; matches transformer.cache_spec)
+                spec = P(*lead, "batch", "model", None, None)
+        elif name == "wkv" and nd >= 4:          # (..., B, H, hd, hd)
+            spec = P(*([None] * (nd - 4)), "batch", "model", None, None)
+        elif name == "ssm" and nd >= 4:          # (..., B, H, N, hd)
+            spec = P(*([None] * (nd - 4)), "batch", "model", None, None)
+        elif name == "conv" and nd >= 3:         # (..., B, r-1, ch)
+            spec = P(*([None] * (nd - 3)), "batch", None, "model")
+        elif name == "shift" and nd >= 2:        # (..., B, d)
+            spec = P(*([None] * (nd - 2)), "batch", "model")
+        else:
+            spec = P()
+        out.append(finalize(spec, shape, mesh))
+    return jax.tree_util.tree_unflatten(flat[1], out)

@@ -1,0 +1,108 @@
+"""Three-mode parallel strategy (paper SS3.4 / contribution C6), TPU form.
+
+The paper switches between only-T (tiles), multi-dimensional, and only-C&K
+parallelism by layer scale.  On an SPMD mesh the analogue is: which mesh
+axes shard which GEMM dimension of the Winograd-domain batched matmul
+V(L,T,C) x U(L,C,K):
+
+  "data"  (only-T)   tiles T over every device; U replicated (broadcast
+                     once), zero per-step collectives -- shallow layers,
+                     huge T, small C*K;
+  "2d"    (multi)    T over the "data" axis, K over the "model" axis;
+                     V broadcast along model, U along data -- mid layers;
+  "model" (only-CK)  C and K over the model axis; partial outputs
+                     all-reduced -- deep layers where T is tiny.
+
+``choose_mode`` evaluates the modeled per-device step time (compute at the
+MXU roofline + weight/activation movement at ICI bandwidth) and returns the
+argmin -- the paper's decision rule re-derived from this machine's numbers
+instead of Kunpeng cache sizes.  ``benchmarks/fig9_parallel_modes.py``
+sweeps it over the Table-1 layers; the same selector drives the LM-level
+hillclimb (EXPERIMENTS.md SSPerf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import hw
+
+MODES = ("data", "2d", "model")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModeCost:
+    mode: str
+    t_compute: float
+    t_comm: float
+
+    @property
+    def t_total(self) -> float:
+        return max(self.t_compute, self.t_comm) + 0.2 * min(
+            self.t_compute, self.t_comm)
+
+
+def mode_cost(
+    mode: str,
+    *,
+    T: int,
+    C: int,
+    K: int,
+    L: int,
+    elt: int = 4,
+    mesh=(16, 16),
+    flops_per_s: float = hw.PEAK_FLOPS_BF16,
+    link_bw: float = hw.ICI_BW,
+) -> ModeCost:
+    dp, tp = mesh
+    P = dp * tp
+    flops = 2.0 * L * T * C * K
+
+    if mode == "data":
+        # tiles everywhere; U replicated -> every device receives U once
+        t_comm = L * C * K * elt / link_bw
+        t_comp = flops / (P * flops_per_s)
+    elif mode == "model":
+        # C x K over the model axis; tiles replicated along it.
+        # partial outputs all-reduced over tp; V broadcast along tp.
+        t_comp = flops / (P * flops_per_s) * (P / (dp * tp))  # = /P
+        t_comp = flops / (dp * tp * flops_per_s)
+        ar = 2.0 * L * (T / dp) * K * elt / link_bw          # ring AR
+        bcast = L * (T / dp) * C * elt / link_bw
+        t_comm = ar + bcast
+    elif mode == "2d":
+        # T over data, K over model; V broadcast along model (receive
+        # V/dp once), U broadcast along data (receive U/tp once)
+        t_comp = flops / (P * flops_per_s)
+        t_comm = (L * (T / dp) * C * elt + L * C * (K / tp) * elt) / link_bw
+    else:
+        raise ValueError(mode)
+    return ModeCost(mode, t_comp, t_comm)
+
+
+def choose_mode(T: int, C: int, K: int, L: int, *, elt: int = 4,
+                mesh=(16, 16)) -> str:
+    costs = [mode_cost(m, T=T, C=C, K=K, L=L, elt=elt, mesh=mesh)
+             for m in MODES]
+    return min(costs, key=lambda c: c.t_total).mode
+
+
+def mode_table(layers, m: int = 6, r: int = 3, mesh=(16, 16)) -> list[dict]:
+    """Per-layer mode choice + modeled times for a Table-1 layer list."""
+    out = []
+    a = m + r - 1
+    L = a * a
+    for spec in layers:
+        tH = -(-(spec.H - r + 1 + 2 * spec.pad) // m)
+        T = tH * tH
+        costs = {mm: mode_cost(mm, T=T, C=spec.C, K=spec.K, L=L, mesh=mesh)
+                 for mm in MODES}
+        best = min(costs.values(), key=lambda c: c.t_total)
+        out.append({
+            "layer": spec.name, "T": T, "C": spec.C, "K": spec.K,
+            **{f"t_{mm}_us": costs[mm].t_total * 1e6 for mm in MODES},
+            "chosen": best.mode,
+            "speedup_vs_worst": max(c.t_total for c in costs.values())
+            / best.t_total,
+        })
+    return out

@@ -1,0 +1,2 @@
+from .step import TrainState, build_train_step, init_state  # noqa: F401
+from .trainer import Trainer, TrainerConfig  # noqa: F401

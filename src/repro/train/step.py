@@ -1,0 +1,133 @@
+"""Train-step construction: grad accumulation, clipping, compression, update.
+
+``build_train_step(api, opt, ...)`` returns a pure function
+``(state, batch) -> (state, metrics)`` suitable for jit with donated state.
+
+Distributed-optimization structure:
+  * microbatching: the global batch is split into ``microbatches`` slices
+    and gradients are accumulated with a ``lax.scan`` (keeps HLO compact;
+    XLA overlaps the per-microbatch reduce with the next microbatch's
+    backward under the latency-hiding scheduler);
+  * optional int8 error-feedback gradient compression at the accumulation
+    boundary (the payload that crosses the "pod" axis in deployment);
+  * global-norm clipping in fp32;
+  * the optimizer update runs on FSDP-sharded states (sharding inherited
+    from the parameter PartitionSpecs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelApi
+from repro.optim import clip_by_global_norm, ef_compress_grads, ef_init
+from repro.optim.adamw import Optimizer
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    step: jax.Array
+    params: Any
+    opt_state: Any
+    ef_residual: Any | None = None        # error-feedback buffers (optional)
+
+
+def init_state(api: ModelApi, opt: Optimizer, key, *,
+               compress: bool = False) -> TrainState:
+    params = api.init(key)
+    return TrainState(
+        step=jnp.int32(0),
+        params=params,
+        opt_state=opt.init(params),
+        ef_residual=ef_init(params) if compress else None,
+    )
+
+
+def _split_batch(batch: dict, n: int) -> dict:
+    """(B, ...) -> (n, B//n, ...) on every leading-batch leaf.
+
+    The reshape must be followed by a sharding constraint pinning ALL batch
+    sharding onto the microbatch dim: otherwise SPMD propagation happily
+    shards the scan axis itself, replicating each microbatch across part of
+    the "data" axis (8x redundant compute + per-layer grad all-reduces over
+    the replica groups -- observed in the dry-run before this fix).
+    """
+    from repro.parallel import constrain
+
+    def f(x):
+        # positions for M-RoPE are (3, B, S): split axis 1
+        if x.ndim >= 3 and x.shape[0] == 3 and "int" in str(x.dtype):
+            y = x.reshape(3, n, x.shape[1] // n, *x.shape[2:]).swapaxes(0, 1)
+            return constrain(y, None, None, "batch", *([None] * (y.ndim - 3)))
+        y = x.reshape(n, x.shape[0] // n, *x.shape[1:])
+        return constrain(y, None, "batch", *([None] * (y.ndim - 2)))
+
+    return jax.tree_util.tree_map(f, batch)
+
+
+def build_train_step(
+    api: ModelApi,
+    opt: Optimizer,
+    *,
+    microbatches: int = 1,
+    clip_norm: float | None = 1.0,
+    compress: bool = False,
+    remat: bool = True,
+    accum_dtype: str = "float32",
+):
+    def loss_fn(params, mb):
+        loss, metrics = api.loss(params, mb, remat=remat)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: dict):
+        params = state.params
+        if microbatches > 1:
+            mbs = _split_batch(batch, microbatches)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), grads = grad_fn(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(a.dtype), g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            # >=100B models accumulate in bf16 (half the accumulator HBM;
+            # the optimizer still updates in fp32 master precision)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.dtype(accum_dtype)), params)
+            (grads, loss_sum), _ = jax.lax.scan(acc_body, (g0, jnp.float32(0)), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            metrics = {"loss": loss_sum / microbatches}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        new_residual = state.ef_residual
+        if compress:
+            grads, new_residual = ef_compress_grads(grads, state.ef_residual)
+
+        # barrier: clipping/optimizer read grads in fp32; without it XLA
+        # fuses that convert INTO the per-layer gradient all-reduces,
+        # doubling their wire bytes (bf16 grads reduced as f32 -- observed
+        # on every train cell before this barrier)
+        grads = jax.lax.optimization_barrier(grads)
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            metrics = {**metrics, "grad_norm": gnorm}
+
+        new_params, new_opt = opt.update(grads, state.opt_state, params)
+        new_state = TrainState(
+            step=state.step + 1,
+            params=new_params,
+            opt_state=new_opt,
+            ef_residual=new_residual,
+        )
+        return new_state, metrics
+
+    return train_step

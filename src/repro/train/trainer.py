@@ -1,0 +1,113 @@
+"""Trainer loop: checkpoint/restart, straggler monitor, deterministic data.
+
+Fault-tolerance contract:
+  * state checkpoints every ``ckpt_every`` steps via the async writer;
+  * ``Trainer.run`` resumes from the latest checkpoint automatically --
+    because the data pipeline is a pure function of (seed, step), the
+    restarted run consumes exactly the batches the lost run would have;
+  * elastic restart: pass a different mesh and the restore path re-shards
+    (checkpoint shards reassemble through host-global arrays);
+  * straggler monitor: per-step wall time is tracked against a running
+    median; steps slower than ``straggler_factor`` x median are logged with
+    the step index (on a real cluster this is exported and used to evict
+    slow hosts -- the hook is ``on_straggler``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro import checkpoint as ckpt_lib
+
+from .step import TrainState
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    straggler_window: int = 32
+
+
+class Trainer:
+    def __init__(
+        self,
+        train_step: Callable,               # (state, batch) -> (state, metrics)
+        pipeline,                           # .batch_at(step) -> dict
+        cfg: TrainerConfig,
+        *,
+        donate: bool = True,
+        on_straggler: Callable[[int, float, float], None] | None = None,
+        log: Callable[[str], None] = print,
+    ):
+        self.cfg = cfg
+        self.pipeline = pipeline
+        self.on_straggler = on_straggler
+        self.log = log
+        self._step_times: list[float] = []
+        self.stragglers: list[tuple[int, float]] = []
+        self._jit_step = jax.jit(
+            train_step, donate_argnums=(0,) if donate else ())
+        self._ckpt = (
+            ckpt_lib.AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep)
+            if cfg.ckpt_dir else None
+        )
+
+    # ---------------------------- resume ----------------------------
+
+    def maybe_restore(self, state: TrainState) -> TrainState:
+        if not self.cfg.ckpt_dir:
+            return state
+        last = ckpt_lib.latest_step(self.cfg.ckpt_dir)
+        if last is None:
+            return state
+        self.log(f"[trainer] resuming from step {last}")
+        return ckpt_lib.restore(self.cfg.ckpt_dir, last, state)
+
+    # ----------------------------- loop -----------------------------
+
+    def _track_time(self, step: int, dt: float):
+        self._step_times.append(dt)
+        if len(self._step_times) > self.cfg.straggler_window:
+            self._step_times.pop(0)
+        if len(self._step_times) >= 8:
+            med = statistics.median(self._step_times)
+            if dt > self.cfg.straggler_factor * med:
+                self.stragglers.append((step, dt))
+                self.log(f"[straggler] step {step}: {dt*1e3:.1f} ms "
+                         f"(median {med*1e3:.1f} ms)")
+                if self.on_straggler:
+                    self.on_straggler(step, dt, med)
+
+    def run(self, state: TrainState, *, steps: int | None = None) -> tuple[TrainState, dict]:
+        state = self.maybe_restore(state)
+        start = int(state.step)
+        end = steps if steps is not None else self.cfg.total_steps
+        history: list[float] = []
+        metrics: dict[str, Any] = {}
+        for step in range(start, end):
+            batch = self.pipeline.batch_at(step)
+            t0 = time.perf_counter()
+            state, metrics = self._jit_step(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self._track_time(step, dt)
+            history.append(float(metrics["loss"]))
+            if step % self.cfg.log_every == 0 or step == end - 1:
+                self.log(f"[trainer] step {step:5d} "
+                         f"loss {float(metrics['loss']):.4f} ({dt*1e3:.0f} ms)")
+            if self._ckpt and (step + 1) % self.cfg.ckpt_every == 0:
+                self._ckpt.submit(step + 1, state)
+        if self._ckpt:
+            self._ckpt.submit(int(state.step), state)
+            self._ckpt.wait()
+        return state, {"loss_history": history, **{k: float(v) for k, v in metrics.items()}}

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Tests see the REAL device count (1 on this container) -- only
+# launch/dryrun.py forces 512 placeholder devices.  Sharding integration
+# tests that need a mesh spawn subprocesses with their own XLA_FLAGS.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,55 @@
+"""The paper's CNN zoo: shapes, Winograd-vs-direct equivalence, training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import cnn
+
+
+@pytest.mark.parametrize("name", ["vgg16", "resnet50", "fusionnet"])
+def test_cnn_forward_algorithm_equivalence(name):
+    init, fwd = cnn.CNN_BUILDERS[name]
+    kw = dict(width_mult=0.125)
+    if name == "fusionnet":
+        kw["n_classes"] = 2
+    else:
+        kw["n_classes"] = 10
+    params = init(jax.random.PRNGKey(0), **kw)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 3), jnp.float32)
+    y_direct = fwd(params, x, algorithm="direct")
+    y_wino = fwd(params, x, algorithm="winograd")
+    assert not jnp.isnan(y_wino).any()
+    np.testing.assert_allclose(np.asarray(y_wino), np.asarray(y_direct),
+                               atol=5e-3, rtol=5e-3)
+
+
+def test_cnn_train_step_decreases_loss():
+    init, fwd = cnn.CNN_BUILDERS["vgg16"]
+    params = init(jax.random.PRNGKey(0), width_mult=0.125, n_classes=4)
+    from repro.data import SyntheticImages
+    pipe = SyntheticImages(hw=32, channels=3, n_classes=4, global_batch=8)
+
+    def loss_fn(p, batch):
+        logits = fwd(p, batch["images"], algorithm="winograd")
+        lab = jax.nn.one_hot(batch["labels"], 4)
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * lab, -1))
+
+    @jax.jit
+    def step(p, batch):
+        l, g = jax.value_and_grad(loss_fn)(p, batch)
+        p = jax.tree_util.tree_map(lambda w, gw: w - 0.05 * gw, p, g)
+        return p, l
+
+    losses = []
+    for i in range(8):
+        params, l = step(params, pipe.batch_at(i))
+        losses.append(float(l))
+    assert losses[-1] < losses[0]
+
+
+def test_table1_layer_specs():
+    assert len(cnn.TABLE1_LAYERS) == 14
+    fn52 = next(l for l in cnn.TABLE1_LAYERS if l.name == "FN5.2")
+    assert (fn52.C, fn52.K, fn52.H) == (1024, 1024, 40)

@@ -1,0 +1,87 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs the pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (
+    filter_transform,
+    input_transform,
+    output_transform,
+    wino_fused,
+    wino_gemm,
+)
+from repro.kernels import ref
+
+TOL = {jnp.float32: 2e-4, jnp.bfloat16: 2e-1}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("m,r", [(2, 3), (4, 3), (6, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,C", [(16, 8), (32, 16)])
+def test_input_transform(m, r, dtype, T, C):
+    a = m + r - 1
+    d = _rand(jax.random.PRNGKey(0), (T, a * a, C), dtype)
+    got = input_transform(d, m=m, r=r, block_t=T, block_c=C, interpret=True)
+    want = ref.input_transform_ref(d, m, r)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("m,r", [(2, 3), (6, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("C,K", [(8, 16), (16, 8)])
+def test_filter_transform(m, r, dtype, C, K):
+    w = _rand(jax.random.PRNGKey(1), (r * r, C, K), dtype)
+    got = filter_transform(w, m=m, r=r, block_c=C, block_k=K, interpret=True)
+    want = ref.filter_transform_ref(w, m, r)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype] * 4, rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("L,T,C,K,bt,bc,bk", [
+    (16, 16, 8, 8, 16, 8, 8),
+    (16, 32, 16, 16, 16, 8, 8),     # multi-block grid
+    (64, 16, 8, 16, 8, 8, 16),
+])
+def test_wino_gemm(dtype, L, T, C, K, bt, bc, bk):
+    V = _rand(jax.random.PRNGKey(2), (L, T, C), dtype)
+    U = _rand(jax.random.PRNGKey(3), (L, C, K), dtype)
+    got = wino_gemm(V, U, block_t=bt, block_c=bc, block_k=bk, interpret=True)
+    want = ref.wino_gemm_ref(V, U)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=TOL[dtype] * 4, rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("m,r", [(2, 3), (6, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("T,C,K,bt,bc,bk", [
+    (16, 8, 8, 16, 8, 8),
+    (32, 16, 16, 16, 8, 16),        # C-loop accumulation across grid steps
+])
+def test_output_transform_and_fused(m, r, dtype, T, C, K, bt, bc, bk):
+    a = m + r - 1
+    L = a * a
+    V = _rand(jax.random.PRNGKey(4), (L, T, C), dtype)
+    U = _rand(jax.random.PRNGKey(5), (L, C, K), dtype)
+    O_hat = ref.wino_gemm_ref(V, U)
+    got_out = output_transform(O_hat, m=m, r=r, block_t=bt, block_k=bk,
+                               interpret=True)
+    want_out = ref.output_transform_ref(O_hat, m, r)
+    np.testing.assert_allclose(np.asarray(got_out), np.asarray(want_out),
+                               atol=5e-4, rtol=5e-4)
+
+    got_fused = wino_fused(V, U, m=m, r=r, block_t=bt, block_k=bk, block_c=bc,
+                           interpret=True)
+    want_fused = ref.wino_fused_ref(V, U, m, r)
+    np.testing.assert_allclose(
+        np.asarray(got_fused, np.float32), np.asarray(want_fused, np.float32),
+        atol=5e-4, rtol=5e-4)

@@ -1,0 +1,106 @@
+"""Trainer integration (loss drops, resume, straggler monitor) + serving."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data import SyntheticTokens
+from repro.models.api import build
+from repro.optim import adamw, warmup_cosine
+from repro.serve import ServeEngine
+from repro.train import Trainer, TrainerConfig, build_train_step, init_state
+
+
+def _setup(microbatches=1):
+    cfg = configs.get_smoke_config("chatglm3_6b")
+    api = build(cfg)
+    opt = adamw(warmup_cosine(3e-3, 5, 100), weight_decay=0.01)
+    state = init_state(api, opt, jax.random.PRNGKey(0))
+    step = build_train_step(api, opt, microbatches=microbatches)
+    pipe = SyntheticTokens(vocab=cfg.vocab, seq=32, global_batch=8, seed=0)
+    return api, opt, state, step, pipe
+
+
+def test_loss_drops_and_resume_is_deterministic(tmp_path):
+    api, opt, state, step, pipe = _setup()
+    cfg_t = TrainerConfig(total_steps=24, ckpt_dir=str(tmp_path),
+                          ckpt_every=8, log_every=100)
+    tr = Trainer(step, pipe, cfg_t, log=lambda *_: None)
+    state, out = tr.run(state)
+    h = out["loss_history"]
+    assert h[-1] < h[0] - 0.2
+
+    # kill-and-restart: run 24->32 from the checkpoint; then compare against
+    # an uninterrupted 32-step run -- deterministic data makes them match.
+    tr2 = Trainer(step, pipe, TrainerConfig(
+        total_steps=32, ckpt_dir=str(tmp_path), ckpt_every=8, log_every=100),
+        log=lambda *_: None)
+    s_resumed = init_state(api, opt, jax.random.PRNGKey(0))
+    s_resumed, out2 = tr2.run(s_resumed)
+    assert int(s_resumed.step) == 32
+
+    s_straight = init_state(api, opt, jax.random.PRNGKey(0))
+    tr3 = Trainer(step, pipe, TrainerConfig(total_steps=32, log_every=100),
+                  log=lambda *_: None)
+    s_straight, out3 = tr3.run(s_straight)
+    np.testing.assert_allclose(out2["loss_history"][-1],
+                               out3["loss_history"][-1], rtol=1e-4)
+
+
+def test_microbatched_step_matches_full_batch():
+    """grad accumulation over 4 microbatches == single-shot full batch."""
+    api, opt, _, _, pipe = _setup()
+    batch = pipe.batch_at(0)
+    s1 = init_state(api, opt, jax.random.PRNGKey(0))
+    s4 = init_state(api, opt, jax.random.PRNGKey(0))
+    f1 = jax.jit(build_train_step(api, opt, microbatches=1))
+    f4 = jax.jit(build_train_step(api, opt, microbatches=4))
+    s1, m1 = f1(s1, batch)
+    s4, m4 = f4(s4, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-4)
+    w1 = jax.tree_util.tree_leaves(s1.params)[2]
+    w4 = jax.tree_util.tree_leaves(s4.params)[2]
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w4),
+                               atol=2e-5, rtol=1e-3)
+
+
+def test_straggler_monitor():
+    api, opt, state, step, pipe = _setup()
+    tr = Trainer(step, pipe, TrainerConfig(total_steps=1, log_every=1000),
+                 log=lambda *_: None)
+    for i in range(20):
+        tr._track_time(i, 0.01)
+    tr._track_time(20, 0.2)        # 20x median
+    assert tr.stragglers and tr.stragglers[-1][0] == 20
+
+
+def test_compressed_training_still_learns():
+    cfg = configs.get_smoke_config("chatglm3_6b")
+    api = build(cfg)
+    opt = adamw(3e-3)
+    state = init_state(api, opt, jax.random.PRNGKey(0), compress=True)
+    step = jax.jit(build_train_step(api, opt, compress=True))
+    pipe = SyntheticTokens(vocab=cfg.vocab, seq=32, global_batch=8, seed=0)
+    losses = []
+    for i in range(16):
+        state, m = step(state, pipe.batch_at(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.1
+
+
+def test_serve_engine_greedy_matches_forward():
+    cfg = configs.get_smoke_config("rwkv6_1_6b")
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(api, params, max_len=48)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    out = engine.generate(prompts, max_new_tokens=4)
+    assert out.shape == (2, 4)
+    # first generated token == argmax of the training forward's last logits
+    lf, _ = api.forward(params, {"tokens": prompts})
+    np.testing.assert_array_equal(
+        np.asarray(out[:, 0]),
+        np.asarray(jnp.argmax(lf[:, -1, : cfg.vocab], -1)))

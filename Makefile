@@ -1,0 +1,23 @@
+PYTHONPATH := src
+PYTEST := PYTHONPATH=$(PYTHONPATH) python -m pytest
+
+# Fast tier-1 subset: conv/kernel/plan/blocking correctness + unit layers.
+# `slow`-marked sweeps are deselected by pytest.ini; this target further
+# restricts to the modules that gate every PR (finishes in ~4 min).
+verify:
+	$(PYTEST) -q -x tests/test_transforms.py tests/test_blocking.py \
+	    tests/test_plan.py tests/test_kernels.py tests/test_conv.py \
+	    tests/test_optim.py tests/test_checkpoint_data.py
+
+# Full tier-1 (slow sweeps still deselected by default addopts)
+test:
+	$(PYTEST) -q
+
+# Everything, including slow sweeps
+test-all:
+	$(PYTEST) -q -m ""
+
+bench-traffic:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.fig7_fused_traffic
+
+.PHONY: verify test test-all bench-traffic

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import conv2d
-from repro.core.blocking import select_tile_m
+from repro.core.plan import ConvSpec, plan
 
 from .common import emit, scaled_layers, timeit
 
@@ -31,13 +31,15 @@ def run(scale: float = 0.125, reps: int = 3) -> list[dict]:
             fn = jax.jit(functools.partial(
                 conv2d, pad=1, algorithm="winograd", m=m))
             times[m] = timeit(fn, x, w, reps=reps)
-        chosen = select_tile_m(1, spec.H, spec.W, spec.C, spec.K)
+        cplan = plan(ConvSpec(N=1, H=spec.H, W=spec.W, C=spec.C, K=spec.K,
+                              r=3, pad=spec.pad))
         best = min(times, key=times.get)
         rows.append({
             "layer": spec.name, "H": spec.H, "C": spec.C, "K": spec.K,
             "t_F2_ms": times[2] * 1e3, "t_F4_ms": times[4] * 1e3,
             "t_F6_ms": times[6] * 1e3,
-            "fastest_m": best, "policy_m": chosen,
+            "fastest_m": best, "policy_m": cplan.m,
+            "planned": cplan.algorithm,
         })
     emit(rows, "fig5: F(m,3) per layer (wall ms, host) + selection policy")
     return rows

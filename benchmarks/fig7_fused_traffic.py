@@ -1,54 +1,90 @@
-"""Fig. 7 analogue: fused vs non-fused Winograd at fixed F(m,r).
+"""Fig. 7 analogue: nonfused vs fused vs fused-e2e Winograd at fixed F(m,r).
 
-On the CPU host XLA fuses the jnp pipeline anyway, so the honest
-fused-vs-non-fused comparison for the TPU target is the *modeled HBM
-traffic* of the Pallas pipelines from the blocking analysis (core/blocking):
-the non-fused pipeline writes + re-reads the Winograd-domain O^ (L,T,K)
-fp32 tensor; the fused kernel keeps it in VMEM (paper contribution C1).
-We report both traffic models and the implied memory-roofline speedup per
-Table-1 layer, plus interpret-mode equality of the two pipelines (the
-correctness side of the claim).
+On the CPU host XLA fuses the jnp pipeline anyway, so the honest comparison
+for the TPU target is the *modeled HBM traffic* of the three Pallas
+pipelines from the blocking analysis (core/blocking), all measured
+end-to-end (downstream of tile extraction):
+
+  nonfused   transform round trip + V re-read per K block + O^ round trip
+  fused      transform round trip + V re-read per K block (paper C1)
+  fused_e2e  single pass: d read once into the VMEM V-cache, no V, no O^
+             (this repo's end-to-end kernel, wino_fused_e2e)
+
+We report all three traffic models and the implied memory-roofline
+speedups per Table-1 layer, emit the table as ``BENCH_fused_traffic.json``
+for CI tracking, and check interpret-mode equality of the three pipelines
+(the correctness side of the claim).
 """
 
 from __future__ import annotations
+
+import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import blocking
-from repro.core.tiles import num_tiles_1d
+from repro.core.plan import ConvSpec, plan
 from repro.kernels import ops
 
 from .common import emit, scaled_layers
 
+JSON_PATH = "BENCH_fused_traffic.json"
 
-def run(scale: float = 0.125, m: int = 6, check_small: bool = True) -> list[dict]:
+
+def run(scale: float = 0.125, m: int = 6, check_small: bool = True,
+        json_path: str | None = JSON_PATH) -> list[dict]:
     rows = []
     r = 3
     for spec in scaled_layers(scale):
-        tH = num_tiles_1d(spec.H + 2 * spec.pad - r + 1, m)
-        T = tH * tH
-        cfg = blocking.choose_blocks(T, spec.C, spec.K, m, r, 4)
-        speedup = cfg.hbm_bytes_nonfused / cfg.hbm_bytes_fused
-        rows.append({
+        cplan = plan(ConvSpec(N=1, H=spec.H, W=spec.W, C=spec.C, K=spec.K,
+                              r=r, pad=spec.pad), candidates=(m,))
+        T, _, _ = cplan.spec.tiles(m)
+        cfgs = {p: blocking.choose_blocks(T, spec.C, spec.K, m, r, 4,
+                                          pipeline=p)
+                for p in blocking.PIPELINES}
+        e2e = cfgs["fused_e2e"]
+        fused = cfgs["fused"]
+        nonfused = cfgs["nonfused"]
+        # e2e can be None (V-cache over VMEM budget); emit JSON null, not
+        # the invalid literal NaN
+        row = {
             "layer": spec.name, "T": T,
-            "block_t": cfg.block_t, "block_c": cfg.block_c,
-            "block_k": cfg.block_k,
-            "vmem_KiB": cfg.vmem_bytes // 1024,
-            "fused_MB": cfg.hbm_bytes_fused / 1e6,
-            "nonfused_MB": cfg.hbm_bytes_nonfused / 1e6,
-            "traffic_speedup": speedup,
-        })
-    emit(rows, f"fig7: fused vs non-fused modeled HBM traffic, F({m},3)")
+            "block_t": fused.block_t, "block_c": fused.block_c,
+            "block_k": fused.block_k,
+            "vmem_KiB": fused.vmem_bytes // 1024,
+            "nonfused_MB": nonfused.hbm_bytes_nonfused_pipeline / 1e6,
+            "fused_MB": fused.hbm_bytes_fused_pipeline / 1e6,
+            "e2e_MB": (e2e.hbm_bytes_e2e / 1e6) if e2e else None,
+            "fused_speedup": (nonfused.hbm_bytes_nonfused_pipeline
+                              / fused.hbm_bytes_fused_pipeline),
+            "e2e_speedup": (nonfused.hbm_bytes_nonfused_pipeline
+                            / e2e.hbm_bytes_e2e) if e2e else None,
+            "e2e_vs_fused": (fused.hbm_bytes_fused_pipeline
+                             / e2e.hbm_bytes_e2e) if e2e else None,
+            "planned": cplan.algorithm,
+        }
+        rows.append(row)
+    emit(rows, f"fig7: nonfused vs fused vs fused-e2e modeled HBM traffic, F({m},3)")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"figure": "fig7_fused_traffic", "m": m, "scale": scale,
+                       "rows": rows}, f, indent=2)
+        print(f"# fig7: wrote {json_path}\n")
 
     if check_small:
         x = jax.random.normal(jax.random.PRNGKey(0), (1, 20, 20, 8), jnp.float32)
         w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 8, 8), jnp.float32)
-        a = ops.conv2d_pallas(x, w, m=m, pad=1, fused=True, interpret=True)
-        b = ops.conv2d_pallas(x, w, m=m, pad=1, fused=False, interpret=True)
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
-        print("# fig7: fused == non-fused (interpret-mode check) PASSED\n")
+        outs = {p: ops.conv2d_pallas(x, w, m=m, pad=1, pipeline=p, interpret=True)
+                for p in blocking.PIPELINES}
+        np.testing.assert_allclose(np.asarray(outs["fused"]),
+                                   np.asarray(outs["nonfused"]), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(outs["fused_e2e"]),
+                                   np.asarray(outs["fused"]), atol=1e-4)
+        print("# fig7: nonfused == fused == fused_e2e (interpret-mode check) "
+              "PASSED\n")
     return rows
 
 

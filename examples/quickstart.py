@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import conv2d
-from repro.core.blocking import choose_blocks, select_tile_m
+from repro.core.plan import ConvSpec, plan
 from repro.core.transforms import arithmetic_reduction_2d
 from repro.core.winograd import direct_conv2d
 
@@ -24,13 +24,15 @@ print(f"max |winograd - direct| = {float(jnp.max(jnp.abs(y_win - y_ref))):.2e}")
 print(f"theoretical multiplication reduction F(6,3): "
       f"{arithmetic_reduction_2d(6, 3):.4f}x")
 
-# 2. the F(m,r) selection policy + blocking analysis (paper SS3.2.2 on TPU)
-m = select_tile_m(1, 56, 56, 64, 64)
-cfg = choose_blocks(((56 // m) + 1) ** 2, 64, 64, m, 3)
-print(f"policy selects F({m},3); blocks (T,C,K)=({cfg.block_t},"
-      f"{cfg.block_c},{cfg.block_k}), VMEM {cfg.vmem_bytes//1024} KiB, "
-      f"fused HBM traffic {cfg.hbm_bytes_fused/1e6:.1f} MB "
-      f"(non-fused {cfg.hbm_bytes_nonfused/1e6:.1f} MB)")
+# 2. the ConvPlan layer: one cached decision for algorithm / F(m,r) /
+#    blocking / parallel mode (paper SS3.2.2 + C6/C7 on TPU)
+p = plan(ConvSpec(N=1, H=56, W=56, C=64, K=64, r=3, pad=1))
+cfg = p.blocks
+print(f"plan: {p.algorithm}, F({p.m},3), mode '{p.parallel_mode}'; "
+      f"blocks (T,C,K)=({cfg.block_t},{cfg.block_c},{cfg.block_k}), "
+      f"VMEM {cfg.vmem_bytes//1024} KiB, e2e HBM traffic "
+      f"{cfg.hbm_bytes_e2e/1e6:.1f} MB (fused {cfg.hbm_bytes_fused_pipeline/1e6:.1f}, "
+      f"non-fused {cfg.hbm_bytes_nonfused_pipeline/1e6:.1f})")
 
 # 3. wall-clock on this host (XLA-compiled)
 for algo in ("direct", "im2col", "winograd"):
@@ -41,9 +43,11 @@ for algo in ("direct", "im2col", "winograd"):
         jax.block_until_ready(fn(x, w))
     print(f"{algo:10s} {(time.perf_counter()-t0)/5*1e3:7.2f} ms")
 
-# 4. the Pallas TPU kernels validate against the same oracle (interpret mode)
-y_pal = conv2d(x[:, :20, :20], w, pad=1, algorithm="winograd_fused", m=6,
+# 4. the Pallas TPU kernels validate against the same oracle (interpret
+#    mode) -- including the single-pass pipeline where neither V nor O^
+#    ever exists in HBM
+y_pal = conv2d(x[:, :20, :20], w, pad=1, algorithm="winograd_fused_e2e", m=6,
                differentiable=False)
 y_r2 = direct_conv2d(x[:, :20, :20], w, pad=1)
-print(f"pallas fused kernel max err = "
+print(f"pallas single-pass kernel max err = "
       f"{float(jnp.max(jnp.abs(y_pal - y_r2))):.2e}")

@@ -1,0 +1,8 @@
+#!/usr/bin/env sh
+# Fast tier-1 verification subset (same as `make verify`).
+set -e
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -q -x \
+    tests/test_transforms.py tests/test_blocking.py tests/test_plan.py \
+    tests/test_kernels.py tests/test_conv.py tests/test_optim.py \
+    tests/test_checkpoint_data.py "$@"

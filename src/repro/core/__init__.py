@@ -1,6 +1,14 @@
 """Core: the paper's contribution (fused Winograd convolution) in JAX."""
 
 from .conv import conv1d, conv2d, winograd_eligible  # noqa: F401
+from .plan import (  # noqa: F401
+    ConvPlan,
+    ConvSpec,
+    clear_plan_cache,
+    plan,
+    plan_cache_info,
+    plan_for_conv,
+)
 from .transforms import (  # noqa: F401
     arithmetic_reduction_1d,
     arithmetic_reduction_2d,

@@ -5,25 +5,34 @@ cost (Eq. 15) under L1/L2 capacity constraints (Eq. 10/11), with K_blk and
 C_blk multiples of 16 to avoid edge cases.  On TPU the cache hierarchy
 collapses to HBM->VMEM, so:
 
-  * the capacity constraint (Eq. 10/11 analogue) is the fused kernel's VMEM
-    working set -- V, U stream blocks (double-buffered by the Pallas
-    pipeline), the f32 accumulator, and the output tile block;
+  * the capacity constraint (Eq. 10/11 analogue) is the kernel's VMEM
+    working set -- streamed operand blocks (double-buffered by the Pallas
+    pipeline), the f32 accumulator, and the output tile block.  The
+    end-to-end fused pipeline additionally keeps a (L, T_blk, C) f32
+    V-cache resident so the input transform runs once per tile block;
 
-  * the traffic objective (Eq. 15 analogue) counts HBM bytes:
+  * the traffic objective (Eq. 15 analogue) counts HBM bytes.  Three
+    pipelines are modeled (DESIGN.md SS4):
 
-      bytes(V)   = e * L*T*C * ceil(K/K_blk)     (V re-read per K block)
-      bytes(U)   = e * L*C*K * ceil(T/T_blk)     (U re-read per T block)
-      bytes(out) = e * T*m^2*K                   (written once -- the fused
-                                                  saving; non-fused adds
-                                                  2 * 4 * L*T*K for O^)
+      nonfused   bytes(V)*ceil(K/bk) + bytes(U)*ceil(T/bt) + bytes(out)
+                 + 2 * 4 * L*T*K                  (O^ write + read, f32)
+      fused      same minus the O^ round trip     (paper C1)
+      fused_e2e  bytes(d) read ONCE (+ a small pipeline re-prime term)
+                 + bytes(U)*ceil(T/bt) + bytes(out); V never exists in
+                 HBM, so the bytes(V)*ceil(K/bk) re-read term and the
+                 input-transform round trip (d read + V write) vanish.
 
   * edge-case avoidance becomes MXU/lane alignment: blocks are multiples of
-    (8, 128) and the T/C/K extents are zero-padded up to block multiples
-    (zero rows/columns are exact no-ops through the bilinear algorithm).
+    the sublane tile and the T/C/K extents are zero-padded up to block
+    multiples (zero rows/columns are exact no-ops through the bilinear
+    algorithm).
 
 ``choose_blocks`` enumerates the aligned candidate space and returns the
 traffic-minimizing configuration -- a deterministic analytical choice, like
-the paper's heuristic, not an autotuner.
+the paper's heuristic, not an autotuner.  It is a *mechanism*: the decision
+of which pipeline/m to run lives in ``repro.core.plan`` (the single
+planning layer); ``select_tile_m`` is kept as a thin back-compat wrapper
+over that layer.
 """
 
 from __future__ import annotations
@@ -32,6 +41,8 @@ import dataclasses
 import functools
 
 from . import hw
+
+PIPELINES = ("nonfused", "fused", "fused_e2e")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,9 +53,24 @@ class BlockConfig:
     vmem_bytes: int
     hbm_bytes_fused: int
     hbm_bytes_nonfused: int
+    # End-to-end fused pipeline bytes (kernel == pipeline: the transform is
+    # a GEMM prologue, so there is no separate transform-stage round trip).
+    hbm_bytes_e2e: int = 0
+    # Whole-pipeline bytes for the two-stage paths: kernel traffic plus the
+    # input-transform round trip (d read + V write) that precedes them.
+    hbm_bytes_fused_pipeline: int = 0
+    hbm_bytes_nonfused_pipeline: int = 0
 
     def as_kwargs(self) -> dict:
         return dict(block_t=self.block_t, block_c=self.block_c, block_k=self.block_k)
+
+    def pipeline_bytes(self, pipeline: str) -> int:
+        """Modeled end-to-end HBM bytes downstream of tile extraction."""
+        return {
+            "nonfused": self.hbm_bytes_nonfused_pipeline,
+            "fused": self.hbm_bytes_fused_pipeline,
+            "fused_e2e": self.hbm_bytes_e2e,
+        }[pipeline]
 
 
 def _ceil_div(a: int, b: int) -> int:
@@ -55,12 +81,44 @@ def round_up(x: int, mult: int) -> int:
     return _ceil_div(x, mult) * mult
 
 
+def axis_candidates(size: int, granule: int, caps: tuple[int, ...]) -> list[int]:
+    """Aligned candidate block sizes for one axis.
+
+    Candidates are the ``caps`` clamped to the smallest sublane-aligned
+    block covering the extent, so a candidate never exceeds the axis by
+    more than one alignment step (the old logic could propose a 256 block
+    for a 130-wide axis, nearly doubling padding traffic).
+    """
+    sub = granule if granule < 128 else 8
+    limit = round_up(max(size, 1), sub)
+    if size <= granule:
+        return [limit]
+    cands = {min(cap, limit) for cap in caps}
+    return sorted(c for c in cands if c > 0)
+
+
 def fused_vmem_bytes(L: int, m: int, bt: int, bc: int, bk: int, elt: int) -> int:
     v_stream = 2 * L * bt * bc * elt          # double-buffered
     u_stream = 2 * L * bc * bk * elt
     acc = L * bt * bk * 4                     # f32 accumulator scratch
     out = 2 * bt * m * m * bk * elt
     return v_stream + u_stream + acc + out
+
+
+def e2e_vmem_bytes(L: int, m: int, Cp: int, bt: int, bc: int, bk: int,
+                   elt: int) -> int:
+    """VMEM working set of the end-to-end fused kernel (wino_fused_e2e).
+
+    The B^T d B prologue replaces the streamed V operand with (a) the
+    streamed raw-tile block d and (b) a full-C f32 V-cache that lets the
+    transform run once per tile block and be reused across every K block.
+    """
+    d_stream = 2 * bt * L * bc * elt          # double-buffered raw tiles
+    u_stream = 2 * L * bc * bk * elt
+    v_cache = L * bt * Cp * 4                 # f32, resident across K blocks
+    acc = L * bt * bk * 4
+    out = 2 * bt * m * m * bk * elt
+    return d_stream + u_stream + v_cache + acc + out
 
 
 def hbm_traffic(L: int, m: int, T: int, C: int, K: int, bt: int, bk: int, elt: int,
@@ -72,6 +130,45 @@ def hbm_traffic(L: int, m: int, T: int, C: int, K: int, bt: int, bk: int, elt: i
     return v + u + out + extra
 
 
+def transform_stage_bytes(L: int, T: int, C: int, elt: int) -> int:
+    """HBM round trip of the standalone input transform: d read + V write."""
+    return 2 * L * T * C * elt
+
+
+def hbm_traffic_e2e(L: int, m: int, T: int, C: int, K: int, bt: int, bc: int,
+                    bk: int, elt: int) -> int:
+    """End-to-end fused pipeline traffic: the tile blocks d are read once
+    (the V-cache serves every K block), plus one re-prime block per tile
+    block.  The kernel's d index map is (t, 0, 0) for every k > 0, so the
+    only index change after the first K block is the k 0->1 transition --
+    consecutive repeats are not re-fetched -- and with a single C block
+    that index never changes at all."""
+    d = L * T * C * elt
+    reprimes = 1 if (_ceil_div(K, bk) > 1 and _ceil_div(C, bc) > 1) else 0
+    reprime = L * bt * bc * elt * _ceil_div(T, bt) * reprimes
+    u = L * C * K * _ceil_div(T, bt) * elt
+    out = T * m * m * K * elt
+    return d + reprime + u + out
+
+
+def _make_config(L: int, m: int, T: int, C: int, K: int, bt: int, bc: int,
+                 bk: int, elt: int, vm: int) -> BlockConfig:
+    fused = hbm_traffic(L, m, T, C, K, bt, bk, elt, fused=True)
+    nonfused = hbm_traffic(L, m, T, C, K, bt, bk, elt, fused=False)
+    stage = transform_stage_bytes(L, T, C, elt)
+    return BlockConfig(
+        block_t=bt,
+        block_c=bc,
+        block_k=bk,
+        vmem_bytes=vm,
+        hbm_bytes_fused=fused,
+        hbm_bytes_nonfused=nonfused,
+        hbm_bytes_e2e=hbm_traffic_e2e(L, m, T, C, K, bt, bc, bk, elt),
+        hbm_bytes_fused_pipeline=fused + stage,
+        hbm_bytes_nonfused_pipeline=nonfused + stage,
+    )
+
+
 @functools.lru_cache(maxsize=None)
 def choose_blocks(
     T: int,
@@ -81,20 +178,20 @@ def choose_blocks(
     r: int,
     elt_bytes: int = 4,
     vmem_budget: int = hw.VMEM_BUDGET,
-) -> BlockConfig:
-    """Pick (block_t, block_c, block_k) minimizing modeled HBM traffic."""
+    pipeline: str = "fused",
+) -> BlockConfig | None:
+    """Pick (block_t, block_c, block_k) minimizing modeled HBM traffic.
+
+    ``pipeline`` selects the VMEM constraint and traffic objective:
+    "fused" (default) and "nonfused" share the streamed-V working set;
+    "fused_e2e" adds the full-C V-cache and minimizes the single-pass
+    traffic.  Returns None for "fused_e2e" when no candidate fits the
+    budget (the V-cache is a hard constraint there); the two-stage
+    pipelines keep the legacy minimum-aligned-blocks fallback.
+    """
+    assert pipeline in PIPELINES, pipeline
     a = m + r - 1
     L = a * a
-
-    def axis_candidates(size: int, granule: int, caps: tuple[int, ...]) -> list[int]:
-        if size <= granule:
-            return [round_up(size, 8) if granule >= 128 else round_up(size, granule)]
-        out = []
-        for cap in caps:
-            b = min(cap, round_up(size, granule))
-            b = min(b, size) if size % cap == 0 or cap <= size else b
-            out.append(min(cap, round_up(size, granule)))
-        return sorted({c for c in out if c > 0})
 
     t_cands = axis_candidates(T, 8, (64, 128, 256, 512))
     c_cands = axis_candidates(C, 128, (128, 256))
@@ -104,35 +201,38 @@ def choose_blocks(
     for bt in t_cands:
         for bc in c_cands:
             for bk in k_cands:
-                vm = fused_vmem_bytes(L, m, bt, bc, bk, elt_bytes)
+                if pipeline == "fused_e2e":
+                    Cp = round_up(C, bc)
+                    vm = e2e_vmem_bytes(L, m, Cp, bt, bc, bk, elt_bytes)
+                else:
+                    vm = fused_vmem_bytes(L, m, bt, bc, bk, elt_bytes)
                 if vm > vmem_budget:
                     continue
-                traffic = hbm_traffic(L, m, T, C, K, bt, bk, elt_bytes, fused=True)
-                cand = BlockConfig(
-                    block_t=bt,
-                    block_c=bc,
-                    block_k=bk,
-                    vmem_bytes=vm,
-                    hbm_bytes_fused=traffic,
-                    hbm_bytes_nonfused=hbm_traffic(L, m, T, C, K, bt, bk, elt_bytes, fused=False),
-                )
+                cand = _make_config(L, m, T, C, K, bt, bc, bk, elt_bytes, vm)
+                obj = {
+                    "fused": cand.hbm_bytes_fused,
+                    "nonfused": cand.hbm_bytes_nonfused,
+                    "fused_e2e": cand.hbm_bytes_e2e,
+                }[pipeline]
+                best_obj = None if best is None else {
+                    "fused": best.hbm_bytes_fused,
+                    "nonfused": best.hbm_bytes_nonfused,
+                    "fused_e2e": best.hbm_bytes_e2e,
+                }[pipeline]
                 if (
                     best is None
-                    or cand.hbm_bytes_fused < best.hbm_bytes_fused
-                    or (
-                        cand.hbm_bytes_fused == best.hbm_bytes_fused
-                        and (bt * bk) > (best.block_t * best.block_k)
-                    )
+                    or obj < best_obj
+                    or (obj == best_obj and (bt * bk) > (best.block_t * best.block_k))
                 ):
                     best = cand
-    if best is None:  # nothing fit: fall back to minimum aligned blocks
-        bt, bc, bk = 64, min(128, round_up(C, 8)), min(128, round_up(K, 8))
-        best = BlockConfig(
-            bt, bc, bk,
-            fused_vmem_bytes(L, m, bt, bc, bk, elt_bytes),
-            hbm_traffic(L, m, T, C, K, bt, bk, elt_bytes, True),
-            hbm_traffic(L, m, T, C, K, bt, bk, elt_bytes, False),
-        )
+    if best is None:
+        if pipeline == "fused_e2e":
+            return None  # V-cache cannot fit: e2e ineligible at this shape
+        bt = 64
+        bc = min(128, round_up(C, 8))
+        bk = min(128, round_up(K, 8))
+        best = _make_config(L, m, T, C, K, bt, bc, bk, elt_bytes,
+                            fused_vmem_bytes(L, m, bt, bc, bk, elt_bytes))
     return best
 
 
@@ -143,25 +243,12 @@ def select_tile_m(
 ) -> int:
     """F(m, r) selection policy -- the paper's C7, re-derived for TPU.
 
-    The paper picks F(6,3) for shallow layers (T large, transform cost
-    amortized) and F(2,3) for deep layers (C/K large, filter-transform and
-    Winograd-domain traffic dominate).  We evaluate a two-term roofline
-    (compute, HBM traffic) per candidate m and take the argmin of the
-    modeled step time -- same policy, analytically grounded.
+    Back-compat wrapper: the decision now lives in the ConvPlan layer
+    (``repro.core.plan``), which evaluates a two-term roofline per (m,
+    pipeline) candidate and caches the result per layer shape.
     """
-    from . import winograd as _wg  # local import to avoid cycle
+    from .plan import ConvSpec, plan  # local import to avoid cycle
 
-    best_m, best_t = None, None
-    for m in candidates:
-        a = m + r - 1
-        P, Q = max(H - r + 1, 1), max(W - r + 1, 1)
-        tH, tW = max(_ceil_div(P, m), 1), max(_ceil_div(Q, m), 1)
-        T = N * tH * tW
-        flops = _wg.winograd_stage_flops(N, H, W, C, K, r, m)["total"]
-        cfg = choose_blocks(T, C, K, m, r, elt_bytes)
-        tiles_bytes = T * a * a * C * elt_bytes           # tile extraction write
-        traffic = cfg.hbm_bytes_fused + tiles_bytes
-        t_est = max(flops / hw.PEAK_FLOPS_F32, traffic / hw.HBM_BW)
-        if best_t is None or t_est < best_t:
-            best_m, best_t = m, t_est
-    return best_m
+    p = plan(ConvSpec(N=N, H=H, W=W, C=C, K=K, r=r, elt_bytes=elt_bytes),
+             candidates=tuple(candidates))
+    return p.m if p.m is not None else candidates[0]

@@ -7,33 +7,37 @@
             | "winograd"         pure-JAX Winograd (reference path, auto-diff)
             | "winograd_tewmm"   NNPACK-style tuple-element-wise multiply
             | "winograd_nonfused"  three-stage Pallas pipeline (NCNN-like)
-            | "winograd_fused"   Algorithm 1: the paper's fused pipeline
-            | "auto"             fused Winograd with F(m,r) chosen by the
-                                 selection policy (paper C7) when eligible,
-                                 falling back to direct otherwise
+            | "winograd_fused"   Algorithm 1: GEMM fused with output transform
+            | "winograd_fused_e2e" the full single-pass pipeline: input
+                                 transform as GEMM prologue, inverse as
+                                 epilogue -- V and O^ never touch HBM
+            | "auto"             resolved by the ConvPlan layer
+                                 (``repro.core.plan``): algorithm, F(m, r)
+                                 and blocking from one cached cost model
+
+Every decision (algorithm, m, blocking, parallel mode) is made by
+``plan(spec)`` -- this module only *dispatches* (DESIGN.md SS5).
 
 Eligibility for Winograd: square filter, r in {2,3,5...}, stride 1, groups 1.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
 import jax
-import jax.numpy as jnp
 
-from . import blocking, winograd as wg
+from . import winograd as wg
+from .plan import ALGORITHM_PIPELINE, eligible, plan_for_conv
 
 Algorithm = Literal[
     "direct", "im2col", "winograd", "winograd_tewmm",
-    "winograd_nonfused", "winograd_fused", "auto",
+    "winograd_nonfused", "winograd_fused", "winograd_fused_e2e", "auto",
 ]
 
 
 def winograd_eligible(w_shape: tuple, stride: int) -> bool:
-    r1, r2 = w_shape[0], w_shape[1]
-    return r1 == r2 and stride == 1 and r1 >= 2 and r1 <= 7
+    return eligible(w_shape[0], w_shape[1], stride)
 
 
 def conv2d(
@@ -47,35 +51,33 @@ def conv2d(
     differentiable: bool = True,
 ) -> jax.Array:
     """2-D convolution (cross-correlation), NHWC x HWIO -> NHWC."""
-    if algorithm == "auto":
-        if winograd_eligible(w.shape, stride):
-            algorithm = "winograd_fused"
-        else:
-            algorithm = "direct"
+    # Only consult the planner when a decision is actually needed: "auto"
+    # dispatch, or a Winograd algorithm called without an explicit m.
+    if algorithm == "auto" or (m is None and algorithm not in ("direct", "im2col")):
+        p = plan_for_conv(x.shape, w.shape, stride=stride, pad=pad,
+                          elt_bytes=x.dtype.itemsize)
+        if algorithm == "auto":
+            algorithm = p.algorithm
+        if m is None:
+            m = p.m if p.m is not None else 4
 
     if algorithm == "direct":
         return wg.direct_conv2d(x, w, pad=pad, stride=stride)
 
     assert stride == 1, f"{algorithm} requires stride 1"
-    r = w.shape[0]
-    if m is None:
-        N, H, W_, C = x.shape
-        K = w.shape[-1]
-        m = blocking.select_tile_m(N, H, W_, C, K, r)
-
     if algorithm == "im2col":
         return wg.im2col_conv2d(x, w, pad=pad)
     if algorithm == "winograd":
         return wg.winograd_conv2d_reference(x, w, m, pad=pad)
     if algorithm == "winograd_tewmm":
         return wg.winograd_conv2d_reference(x, w, m, pad=pad, use_tewmm=True)
-    if algorithm in ("winograd_fused", "winograd_nonfused"):
+    if algorithm in ALGORITHM_PIPELINE:
         from repro.kernels import ops  # deferred: keeps core importable w/o kernels
 
-        fused = algorithm == "winograd_fused"
+        pipeline = ALGORITHM_PIPELINE[algorithm]
         if differentiable:
-            return ops.conv2d_pallas_ad(x, w, m, pad, fused)
-        return ops.conv2d_pallas(x, w, m=m, pad=pad, fused=fused)
+            return ops.conv2d_pallas_ad(x, w, m, pad, pipeline)
+        return ops.conv2d_pallas(x, w, m=m, pad=pad, pipeline=pipeline)
     raise ValueError(f"unknown algorithm {algorithm!r}")
 
 

@@ -8,4 +8,5 @@ from .filter_transform import filter_transform  # noqa: F401
 from .input_transform import input_transform  # noqa: F401
 from .output_transform import output_transform  # noqa: F401
 from .wino_fused import wino_fused  # noqa: F401
+from .wino_fused_e2e import wino_fused_e2e  # noqa: F401
 from .wino_gemm import wino_gemm  # noqa: F401

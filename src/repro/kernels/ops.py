@@ -1,19 +1,24 @@
 """jit'd wrappers composing the Winograd Pallas kernels into full convs.
 
-Two pipelines, mirroring the paper's comparison:
+Three pipelines, mirroring the paper's comparison (DESIGN.md SS3):
 
-  * ``conv2d_pallas(..., fused=True)``  -- Algorithm 1: transforms fused
-    with packing, GEMM fused with the output transform (contribution C1).
-    O^ never exists in HBM.
-  * ``conv2d_pallas(..., fused=False)`` -- the three-stage baseline
-    (transform / GEMM / inverse-transform as separate HBM round trips),
-    i.e. the structure of the libraries the paper beats.
+  * ``pipeline="fused_e2e"`` -- the full single-pass pipeline: one kernel
+    consumes extracted tiles directly, input transform as GEMM prologue
+    (VMEM V-cache), inverse transform as epilogue.  Neither V nor O^ ever
+    exists in HBM.
+  * ``pipeline="fused"`` -- Algorithm 1 back half: transforms fused with
+    packing, GEMM fused with the output transform (contribution C1).
+    O^ never exists in HBM; V still round-trips once.
+  * ``pipeline="nonfused"`` -- the three-stage baseline (transform / GEMM /
+    inverse-transform as separate HBM round trips), i.e. the structure of
+    the libraries the paper beats.
 
-Both consume the same extracted-tile layout and the same blocking model.
-Zero-padding of T/C/K up to block multiples replaces the paper's dual
-(alpha, eta) edge-case micro-kernels: on the MXU, ragged tails are handled
-by padding to (8, 128) alignment, and zero rows/columns pass through the
-bilinear algorithm exactly (DESIGN.md SS2).
+All consume the same extracted-tile layout; blocking comes from the
+ConvPlan layer (``repro.core.plan.kernel_blocks`` -- the single decision
+point).  Zero-padding of T/C/K up to block multiples replaces the paper's
+dual (alpha, eta) edge-case micro-kernels: on the MXU, ragged tails are
+handled by padding to sublane alignment, and zero rows/columns pass
+through the bilinear algorithm exactly (DESIGN.md SS2).
 """
 
 from __future__ import annotations
@@ -23,14 +28,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import blocking, tiles as tiling
-from repro.core.blocking import BlockConfig, round_up
+from repro.core import tiles as tiling
+from repro.core.blocking import PIPELINES, BlockConfig, round_up
 
 from . import common
 from .filter_transform import filter_transform
 from .input_transform import input_transform
 from .output_transform import output_transform
 from .wino_fused import wino_fused
+from .wino_fused_e2e import wino_fused_e2e
 from .wino_gemm import wino_gemm
 
 
@@ -44,7 +50,8 @@ def _pad_dims(T: int, C: int, K: int, cfg: BlockConfig) -> tuple[int, int, int]:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("m", "pad", "fused", "interpret", "block_t", "block_c", "block_k"),
+    static_argnames=("m", "pad", "fused", "pipeline", "interpret",
+                     "block_t", "block_c", "block_k"),
 )
 def conv2d_pallas(
     x: jax.Array,
@@ -52,13 +59,21 @@ def conv2d_pallas(
     *,
     m: int = 6,
     pad: int = 0,
-    fused: bool = True,
+    fused: bool | None = None,
+    pipeline: str = "fused",
     interpret: bool | None = None,
     block_t: int | None = None,
     block_c: int | None = None,
     block_k: int | None = None,
 ) -> jax.Array:
-    """Winograd convolution, Pallas path.  x (N,H,W,C), w (r,r,C,K) -> NHWC."""
+    """Winograd convolution, Pallas path.  x (N,H,W,C), w (r,r,C,K) -> NHWC.
+
+    ``fused`` is kept for back compat (True -> "fused", False ->
+    "nonfused"); ``pipeline`` selects among the three pipelines above.
+    """
+    if fused is not None:
+        pipeline = "fused" if fused else "nonfused"
+    assert pipeline in PIPELINES, pipeline
     r = w.shape[0]
     assert w.shape[0] == w.shape[1]
     a = m + r - 1
@@ -71,9 +86,11 @@ def conv2d_pallas(
     T = d.shape[0]
     d = d.reshape(T, a * a, C)
 
-    # ---- blocking (paper SS3.2.2 analogue) ----
+    # ---- blocking (plan layer; paper SS3.2.2 analogue) ----
+    from repro.core.plan import kernel_blocks  # deferred: keeps import acyclic
+
     elt = x.dtype.itemsize
-    cfg = blocking.choose_blocks(T, C, K, m, r, elt)
+    cfg = kernel_blocks(T, C, K, m, r, elt, pipeline=pipeline)
     if block_t is not None or block_c is not None or block_k is not None:
         cfg = BlockConfig(
             block_t or cfg.block_t, block_c or cfg.block_c, block_k or cfg.block_k,
@@ -84,30 +101,39 @@ def conv2d_pallas(
     w_flat = w.reshape(r * r, C, K)
     w_flat = common.pad_axis_to(common.pad_axis_to(w_flat, 1, Cp), 2, Kp)
 
-    # ---- transforms (packing fused in) ----
-    V = input_transform(d, m=m, r=r, block_t=cfg.block_t, block_c=cfg.block_c,
-                        interpret=interpret)
+    # ---- filter transform (packing fused in) ----
     U = filter_transform(w_flat, m=m, r=r, block_c=cfg.block_c, block_k=cfg.block_k,
                          interpret=interpret)
 
-    # ---- GEMM (+ fused inverse transform) ----
-    if fused:
-        y = wino_fused(
-            V, U, m=m, r=r,
+    if pipeline == "fused_e2e":
+        # ---- single pass: transform prologue + GEMM + inverse epilogue ----
+        y = wino_fused_e2e(
+            d, U, m=m, r=r,
             block_t=cfg.block_t, block_k=cfg.block_k, block_c=cfg.block_c,
             interpret=interpret, out_dtype=x.dtype,
         )
     else:
-        O_hat = wino_gemm(
-            V, U,
-            block_t=cfg.block_t, block_k=cfg.block_k, block_c=cfg.block_c,
-            interpret=interpret,
-        )
-        y = output_transform(
-            O_hat, m=m, r=r,
-            block_t=cfg.block_t, block_k=cfg.block_k,
-            interpret=interpret, out_dtype=x.dtype,
-        )
+        # ---- input transform (separate HBM round trip for V) ----
+        V = input_transform(d, m=m, r=r, block_t=cfg.block_t, block_c=cfg.block_c,
+                            interpret=interpret)
+        # ---- GEMM (+ fused inverse transform) ----
+        if pipeline == "fused":
+            y = wino_fused(
+                V, U, m=m, r=r,
+                block_t=cfg.block_t, block_k=cfg.block_k, block_c=cfg.block_c,
+                interpret=interpret, out_dtype=x.dtype,
+            )
+        else:
+            O_hat = wino_gemm(
+                V, U,
+                block_t=cfg.block_t, block_k=cfg.block_k, block_c=cfg.block_c,
+                interpret=interpret,
+            )
+            y = output_transform(
+                O_hat, m=m, r=r,
+                block_t=cfg.block_t, block_k=cfg.block_k,
+                interpret=interpret, out_dtype=x.dtype,
+            )
 
     # ---- crop padding, assemble spatial output ----
     y = y[:T, :, :K].reshape(T, m, m, K)
@@ -118,27 +144,32 @@ def conv2d_pallas(
 #
 # The transforms are linear, so the exact backward pass is itself a Winograd
 # pipeline: dL/dx is a full-correlation with the channel-transposed,
-# 180deg-rotated filter -- which we run through the same fused Pallas path,
+# 180deg-rotated filter -- which we run through the same Pallas pipeline,
 # keeping the heavy data-gradient on the optimized kernels.  dL/dw uses the
 # canonical XLA filter-gradient convolution (a Winograd filter-side gradient
 # would need F(r, m) transforms; modeled in DESIGN.md SS8 as future work).
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def conv2d_pallas_ad(x: jax.Array, w: jax.Array, m: int, pad: int, fused: bool):
-    return conv2d_pallas(x, w, m=m, pad=pad, fused=fused)
+def conv2d_pallas_ad(x: jax.Array, w: jax.Array, m: int, pad: int,
+                     pipeline: str = "fused"):
+    if isinstance(pipeline, bool):  # legacy fused flag
+        pipeline = "fused" if pipeline else "nonfused"
+    return conv2d_pallas(x, w, m=m, pad=pad, pipeline=pipeline)
 
 
-def _fwd(x, w, m, pad, fused):
-    return conv2d_pallas_ad(x, w, m, pad, fused), (x, w)
+def _fwd(x, w, m, pad, pipeline):
+    return conv2d_pallas_ad(x, w, m, pad, pipeline), (x, w)
 
 
-def _bwd(m, pad, fused, res, gy):
+def _bwd(m, pad, pipeline, res, gy):
     x, w = res
     r = w.shape[0]
+    if isinstance(pipeline, bool):
+        pipeline = "fused" if pipeline else "nonfused"
     # dx: full correlation of gy with rotated, C/K-swapped filter
     w_rot = jnp.transpose(w[::-1, ::-1, :, :], (0, 1, 3, 2))  # (r, r, K, C)
-    dx = conv2d_pallas(gy, w_rot, m=m, pad=r - 1 - pad, fused=fused)
+    dx = conv2d_pallas(gy, w_rot, m=m, pad=r - 1 - pad, pipeline=pipeline)
     # dw: filter gradient via XLA's transposed convolution
     _, vjp = jax.vjp(
         lambda w_: jax.lax.conv_general_dilated(

@@ -52,3 +52,9 @@ def output_transform_ref(O_hat: jax.Array, m: int, r: int) -> jax.Array:
 def wino_fused_ref(V: jax.Array, U: jax.Array, m: int, r: int) -> jax.Array:
     """Fused GEMM + output transform: (L,T,C),(L,C,K) -> (T, m^2, K)."""
     return output_transform_ref(wino_gemm_ref(V, U).astype(V.dtype), m, r)
+
+
+def wino_fused_e2e_ref(d_flat: jax.Array, U: jax.Array, m: int, r: int) -> jax.Array:
+    """Single-pass pipeline: d (T, alpha^2, C), U (L,C,K) -> (T, m^2, K)."""
+    V = input_transform_ref(d_flat, m, r)
+    return wino_fused_ref(V, U, m, r)

@@ -70,29 +70,32 @@ def mesh_view(mesh, mode: str):
                              axis_types=axis_types * 2)
 
 
-def choose_lm_mode(cfg: ModelConfig, shape: str) -> str:
-    """C6 analogue: parallel mode by model/workload scale.
+def _lm_plan(cfg: ModelConfig, shape: str):
+    """Resolve the cached LM workload plan for (arch, run shape).
 
-    Small dense models (fit one chip several times over) train pure-DP
-    with ZeRO-1 state sharding; everything else keeps 2-D TP+DP.  Decode
-    keeps "2d" (the split-K cache sharding needs the model axis).
+    The decision itself lives in the ConvPlan layer (``repro.core.plan``
+    -- the single planning point for parallel-mode/microbatching policy);
+    this module only extracts the scale facts the planner keys on.
     """
+    from repro.core.plan import LMWorkloadSpec, plan_lm
+
     sp = configs.SHAPES[shape]
-    if sp.kind != "train":
-        return "2d"
-    if cfg.n_params() <= 10e9 and not cfg.is_moe:
-        return "dp"
-    return "2d"
+    return plan_lm(LMWorkloadSpec(
+        n_params=float(cfg.n_params()),
+        is_moe=cfg.is_moe,
+        kind=sp.kind,
+        batch=sp.batch,
+    ))
+
+
+def choose_lm_mode(cfg: ModelConfig, shape: str) -> str:
+    """C6 analogue: parallel mode by model/workload scale (plan-layer)."""
+    return _lm_plan(cfg, shape).parallel_mode
 
 
 def microbatches_for(cfg: ModelConfig, shape: str) -> int:
-    """Gradient-accumulation depth for training shapes (B=256 -> 8 x 32;
-    >=50B-param models run 16 x 16 to keep per-layer remat carries small)."""
-    if configs.SHAPES[shape].kind != "train":
-        return 1
-    if configs.SHAPES[shape].batch < 64:
-        return 1
-    return 16 if cfg.n_params() > 50e9 else 8
+    """Gradient-accumulation depth for training shapes (plan-layer)."""
+    return _lm_plan(cfg, shape).microbatches
 
 
 def make_optimizer_for(cfg: ModelConfig):

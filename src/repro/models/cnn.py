@@ -250,3 +250,23 @@ CNN_BUILDERS = {
     "resnet50": (resnet50_init, resnet50_forward),
     "fusionnet": (fusionnet_init, fusionnet_forward),
 }
+
+
+def layer_plans(layers=TABLE1_LAYERS, *, N: int = 1, elt_bytes: int = 4,
+                candidates: tuple[int, ...] = (2, 4, 6)):
+    """Resolve the ConvPlan for each benchmark layer (the networks'
+    Winograd-eligible 3x3 stride-1 convs route through the same cached
+    plans at trace time via ``conv2d(algorithm="auto")``).
+
+    Returns [(ConvLayerSpec, ConvPlan), ...]; repeated calls are cache
+    hits -- the serving-engine amortization story (DESIGN.md SS5).
+    """
+    from repro.core.plan import ConvSpec, plan  # deferred: models -> core only
+
+    out = []
+    for spec in layers:
+        out.append((spec, plan(
+            ConvSpec(N=N, H=spec.H, W=spec.W, C=spec.C, K=spec.K, r=spec.r,
+                     pad=spec.pad, elt_bytes=elt_bytes),
+            candidates=candidates)))
+    return out

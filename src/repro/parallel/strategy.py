@@ -16,9 +16,11 @@ V(L,T,C) x U(L,C,K):
 ``choose_mode`` evaluates the modeled per-device step time (compute at the
 MXU roofline + weight/activation movement at ICI bandwidth) and returns the
 argmin -- the paper's decision rule re-derived from this machine's numbers
-instead of Kunpeng cache sizes.  ``benchmarks/fig9_parallel_modes.py``
-sweeps it over the Table-1 layers; the same selector drives the LM-level
-hillclimb (EXPERIMENTS.md SSPerf).
+instead of Kunpeng cache sizes.  It is a *mechanism*: the only caller that
+decides a mode is the ConvPlan layer (``repro.core.plan``), which caches
+the choice per layer shape; ``mode_table`` below consumes plans.
+``benchmarks/fig9_parallel_modes.py`` sweeps it over the Table-1 layers;
+the same selector drives the LM-level hillclimb (EXPERIMENTS.md SSPerf).
 """
 
 from __future__ import annotations
@@ -88,21 +90,30 @@ def choose_mode(T: int, C: int, K: int, L: int, *, elt: int = 4,
 
 
 def mode_table(layers, m: int = 6, r: int = 3, mesh=(16, 16)) -> list[dict]:
-    """Per-layer mode choice + modeled times for a Table-1 layer list."""
+    """Per-layer mode choice + modeled times for a Table-1 layer list.
+
+    The chosen mode comes from the ConvPlan layer (the single decision
+    point); ``mode_cost`` is only re-evaluated here for the display
+    columns.
+    """
+    from repro.core.plan import ConvSpec, plan  # deferred: avoids cycle
+
     out = []
     a = m + r - 1
     L = a * a
     for spec in layers:
-        tH = -(-(spec.H - r + 1 + 2 * spec.pad) // m)
-        T = tH * tH
+        cplan = plan(
+            ConvSpec(N=1, H=spec.H, W=spec.W, C=spec.C, K=spec.K, r=r,
+                     pad=spec.pad),
+            candidates=(m,), mesh=tuple(mesh))
+        T, _, _ = cplan.spec.tiles(m)
         costs = {mm: mode_cost(mm, T=T, C=spec.C, K=spec.K, L=L, mesh=mesh)
                  for mm in MODES}
-        best = min(costs.values(), key=lambda c: c.t_total)
+        worst = max(c.t_total for c in costs.values())
         out.append({
             "layer": spec.name, "T": T, "C": spec.C, "K": spec.K,
             **{f"t_{mm}_us": costs[mm].t_total * 1e6 for mm in MODES},
-            "chosen": best.mode,
-            "speedup_vs_worst": max(c.t_total for c in costs.values())
-            / best.t_total,
+            "chosen": cplan.parallel_mode,
+            "speedup_vs_worst": worst / costs[cplan.parallel_mode].t_total,
         })
     return out

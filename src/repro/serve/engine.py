@@ -1,4 +1,4 @@
-"""Batched serving engine: jitted prefill + decode with a donated KV cache.
+"""Batched serving engines: LM (prefill + decode) and plan-driven CNN.
 
 The engine compiles two functions per (batch, prompt_len) signature:
 
@@ -84,3 +84,47 @@ class ServeEngine:
         jax.block_until_ready(logits)
         dt = time.perf_counter() - t0
         return batch * steps / dt
+
+
+class ConvServeEngine:
+    """Batched CNN inference engine built on the ConvPlan layer.
+
+    The production argument for a single planning layer (DESIGN.md SS5):
+    a serving engine sees the same layer shapes millions of times, so
+    algorithm/F(m,r)/blocking/mode selection must be *resolved once and
+    cached*, not re-derived per request.  Here every stride-1 3x3 conv in
+    ``forward`` routes through ``conv2d(algorithm="auto")``, whose
+    decisions come from the lru-cached ``repro.core.plan.plan``; this
+    engine adds the per-input-signature jit cache on top, so steady-state
+    requests pay zero selection or tracing cost.
+
+    ``forward(params, images, *, algorithm=...)`` is any of the
+    ``models.cnn`` forwards (or a compatible callable).
+    """
+
+    def __init__(self, forward, params: Any, *, algorithm: str = "auto"):
+        self.forward = forward
+        self.params = params
+        self.algorithm = algorithm
+        self._compiled: dict = {}
+
+    def infer(self, images: jax.Array) -> jax.Array:
+        """(B, H, W, C) -> logits; compiles once per input signature."""
+        key = (tuple(images.shape), str(images.dtype))
+        fn = self._compiled.get(key)
+        if fn is None:
+            fn = jax.jit(functools.partial(self.forward,
+                                           algorithm=self.algorithm))
+            self._compiled[key] = fn
+        return fn(self.params, images)
+
+    @property
+    def compiled_signatures(self) -> int:
+        return len(self._compiled)
+
+    @staticmethod
+    def plan_stats():
+        """Plan-cache hit counters -- the amortization this engine buys."""
+        from repro.core.plan import plan_cache_info
+
+        return plan_cache_info()

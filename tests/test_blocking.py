@@ -1,0 +1,98 @@
+"""Direct unit tests for the blocking model: axis candidates (small and
+ragged extents), per-pipeline constraints, and the e2e traffic ordering."""
+
+import pytest
+
+from repro.core import blocking
+from repro.core.blocking import (
+    axis_candidates,
+    choose_blocks,
+    e2e_vmem_bytes,
+    fused_vmem_bytes,
+    hbm_traffic,
+    hbm_traffic_e2e,
+    round_up,
+)
+
+
+def test_axis_candidates_small_extents():
+    # size <= granule: one block, sublane-aligned, covering the extent
+    assert axis_candidates(4, 8, (64, 128)) == [8]
+    assert axis_candidates(8, 8, (64, 128)) == [8]
+    assert axis_candidates(72, 128, (128, 256)) == [72]
+    assert axis_candidates(100, 128, (128, 256)) == [104]
+    assert axis_candidates(1, 128, (128, 256)) == [8]
+
+
+@pytest.mark.parametrize("size", [130, 196, 200, 300, 513, 1000])
+@pytest.mark.parametrize("granule,caps", [
+    (8, (64, 128, 256, 512)),
+    (128, (128, 256)),
+    (128, (128, 256, 512)),
+])
+def test_axis_candidates_never_exceed_aligned_extent(size, granule, caps):
+    """The old logic could propose blocks far past the extent (e.g. a 256
+    block for a 130-wide axis); now every candidate is within one sublane
+    step of the extent."""
+    limit = round_up(size, granule if granule < 128 else 8)
+    cands = axis_candidates(size, granule, caps)
+    assert cands, (size, granule)
+    for c in cands:
+        assert 0 < c <= limit
+        assert c % (granule if granule < 128 else 8) == 0
+
+
+def test_axis_candidates_ragged_t_axis():
+    # T = 196 (14x14 tiles): caps clamp to the 8-aligned extent, 200
+    assert axis_candidates(196, 8, (64, 128, 256, 512)) == [64, 128, 200]
+
+
+def test_choose_blocks_ragged_dims_fit_extents():
+    cfg = choose_blocks(196, 130, 72, 4, 3)
+    assert cfg.block_t <= round_up(196, 8)
+    assert cfg.block_c <= round_up(130, 8)
+    assert cfg.block_k == round_up(72, 8)
+    # padded extents divide the blocks (what kernels/ops.py relies on)
+    assert round_up(196, cfg.block_t) % cfg.block_t == 0
+    assert round_up(130, cfg.block_c) % cfg.block_c == 0
+
+
+@pytest.mark.parametrize("T,C,K,m", [(64, 8, 8, 2), (196, 130, 72, 4),
+                                     (1024, 256, 512, 6)])
+def test_choose_blocks_pipelines_and_budget(T, C, K, m):
+    for pipeline in blocking.PIPELINES:
+        cfg = choose_blocks(T, C, K, m, 3, pipeline=pipeline)
+        assert cfg is not None
+        a = m + 3 - 1
+        L = a * a
+        if pipeline == "fused_e2e":
+            Cp = round_up(C, cfg.block_c)
+            vm = e2e_vmem_bytes(L, m, Cp, cfg.block_t, cfg.block_c,
+                                cfg.block_k, 4)
+        else:
+            vm = fused_vmem_bytes(L, m, cfg.block_t, cfg.block_c,
+                                  cfg.block_k, 4)
+        assert vm <= blocking.hw.VMEM_BUDGET
+
+
+def test_choose_blocks_e2e_infeasible_returns_none():
+    # C so large the full-C f32 V-cache cannot fit VMEM at any bt
+    assert choose_blocks(512, 16384, 128, 6, 3, pipeline="fused_e2e") is None
+    # ... while the two-stage pipelines keep their fallback
+    assert choose_blocks(512, 16384, 128, 6, 3, pipeline="fused") is not None
+
+
+def test_e2e_traffic_below_fused_pipeline_pointwise():
+    """For identical blocks, the single-pass pipeline strictly beats the
+    two-stage fused pipeline: it deletes the input-transform round trip
+    (d read + V write) and the V re-read per K block, paying only a
+    one-block re-prime per K re-entry."""
+    for (T, C, K, m) in [(64, 8, 8, 2), (196, 130, 72, 4), (1024, 256, 512, 6),
+                         (4096, 1024, 1024, 6)]:
+        a = m + 3 - 1
+        L = a * a
+        bt, bc, bk = 64, min(128, round_up(C, 8)), min(128, round_up(K, 8))
+        e2e = hbm_traffic_e2e(L, m, T, C, K, bt, bc, bk, 4)
+        fused_pipeline = (hbm_traffic(L, m, T, C, K, bt, bk, 4, fused=True)
+                          + blocking.transform_stage_bytes(L, T, C, 4))
+        assert e2e < fused_pipeline, (T, C, K, m)

@@ -10,6 +10,7 @@ from repro.kernels import (
     input_transform,
     output_transform,
     wino_fused,
+    wino_fused_e2e,
     wino_gemm,
 )
 from repro.kernels import ref
@@ -84,4 +85,26 @@ def test_output_transform_and_fused(m, r, dtype, T, C, K, bt, bc, bk):
     want_fused = ref.wino_fused_ref(V, U, m, r)
     np.testing.assert_allclose(
         np.asarray(got_fused, np.float32), np.asarray(want_fused, np.float32),
+        atol=5e-4, rtol=5e-4)
+
+
+@pytest.mark.parametrize("m,r", [(2, 3), (4, 3), (6, 3)])
+@pytest.mark.parametrize("T,C,K,bt,bc,bk", [
+    (16, 8, 8, 16, 8, 8),
+    (32, 16, 16, 16, 8, 16),        # C-loop accumulation across grid steps
+    (16, 16, 32, 16, 8, 16),        # K re-entry: V-cache reused for k > 0
+])
+def test_wino_fused_e2e_kernel(m, r, T, C, K, bt, bc, bk):
+    """Single-pass kernel (B^T d B prologue + GEMM + A^T(.)A epilogue) vs
+    the staged oracle, covering C accumulation and V-cache reuse across K
+    blocks (where the d BlockSpec stops streaming)."""
+    a = m + r - 1
+    L = a * a
+    d = _rand(jax.random.PRNGKey(6), (T, L, C), jnp.float32)
+    U = _rand(jax.random.PRNGKey(7), (L, C, K), jnp.float32)
+    got = wino_fused_e2e(d, U, m=m, r=r, block_t=bt, block_c=bc, block_k=bk,
+                         interpret=True)
+    want = ref.wino_fused_e2e_ref(d, U, m, r)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
         atol=5e-4, rtol=5e-4)

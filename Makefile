@@ -1,13 +1,18 @@
 PYTHONPATH := src
 PYTEST := PYTHONPATH=$(PYTHONPATH) python -m pytest
 
-# Fast tier-1 subset: conv/kernel/plan/blocking correctness + unit layers.
+# Fast tier-1 subset: conv/kernel/plan/blocking correctness + unit layers,
+# then the multi-device parallel-execution module in its own pytest
+# invocation with 8 simulated host devices (the flag must be set before
+# jax initializes, so it cannot share a process with the main subset).
 # `slow`-marked sweeps are deselected by pytest.ini; this target further
-# restricts to the modules that gate every PR (finishes in ~4 min).
+# restricts to the modules that gate every PR (finishes in ~6 min).
 verify:
 	$(PYTEST) -q -x tests/test_transforms.py tests/test_blocking.py \
 	    tests/test_plan.py tests/test_kernels.py tests/test_conv.py \
-	    tests/test_optim.py tests/test_checkpoint_data.py
+	    tests/test_conv_golden.py tests/test_optim.py \
+	    tests/test_checkpoint_data.py
+	REPRO_HOST_DEVICES=8 $(PYTEST) -q -x tests/test_parallel_exec.py
 
 # Full tier-1 (slow sweeps still deselected by default addopts)
 test:

@@ -1,26 +1,115 @@
-"""Fig. 9/10 analogue: the three-mode parallel strategy over the mesh.
+"""Fig. 9/10 analogue: the three-mode parallel strategy, modeled AND measured.
 
-For every Table-1 layer, the modeled step time of each parallel mode
-(only-T / 2-D / only-C&K) on the production (16,16) mesh, the adaptive
-selector's choice, and its speedup over the worst single mode -- the
-paper's claim that no single mode serves all layers, reproduced
-quantitatively for this machine.
+Modeled columns: for every Table-1 layer, the modeled step time of each
+parallel mode (only-T / 2-D / only-C&K) on the production (16,16) mesh,
+the adaptive selector's choice, and its speedup over the worst single
+mode -- the paper's claim that no single mode serves all layers,
+reproduced quantitatively for this machine.
+
+Measured columns: the same three modes *executed* via
+``repro.parallel.executor`` (shard_map over a simulated multi-device host
+mesh, real SPMD partitioning and collectives) on the layer's
+Winograd-domain GEMM, wall-clock per mode plus the measured-best mode.
+Spatial dims are scaled (channels exact, the benchmarks/common.py
+convention) so the sweep stays minutes on CPU.  Absolute times are
+CPU-host numbers; the *ranking* across modes is the measured analogue of
+the paper's Fig. 9.
+
+Emits ``BENCH_parallel_modes.json`` with both column sets for CI tracking.
+
+  XLA_FLAGS is set at module top when run as a script (before jax import,
+  like launch/dryrun.py); under `python -m benchmarks.run` the measured
+  columns require the parent to have >= MEASURE_DEVICES devices and are
+  skipped otherwise.
 """
 
 from __future__ import annotations
 
+import json
+
+MEASURE_DEVICES = 8
+
+if __name__ == "__main__":
+    # before any jax backend init (env flag; importing jax is still fine)
+    from repro.launch.mesh import request_host_devices
+
+    request_host_devices(MEASURE_DEVICES)
+
+import jax
+import jax.numpy as jnp
+
 from repro.models.cnn import TABLE1_LAYERS
-from repro.parallel.strategy import mode_table
+from repro.parallel.strategy import MODES, mode_table
 
-from .common import emit
+from .common import emit, scaled_layers, timeit
+
+JSON_PATH = "BENCH_parallel_modes.json"
 
 
-def run(mesh=(16, 16)) -> list[dict]:
+def measured_rows(scale: float = 0.125, m: int = 4, r: int = 3,
+                  reps: int = 3) -> list[dict]:
+    """Executed per-mode wall times on the simulated host mesh."""
+    from repro.core.plan import ConvSpec
+    from repro.launch.mesh import host_mesh
+    from repro.parallel.executor import execute_gemm
+
+    mesh = host_mesh(MEASURE_DEVICES, tp=2)
+    a = m + r - 1
+    L = a * a
+    rows = []
+    for spec in scaled_layers(scale):
+        T, _, _ = ConvSpec(N=1, H=spec.H, W=spec.W, C=spec.C, K=spec.K,
+                           r=r, pad=spec.pad).tiles(m)
+        kv, ku = jax.random.split(jax.random.PRNGKey(T))
+        V = jax.random.normal(kv, (L, T, spec.C), jnp.float32)
+        U = jax.random.normal(ku, (L, spec.C, spec.K), jnp.float32)
+        times = {}
+        for mode in MODES:
+            fn = jax.jit(lambda v, u, mode=mode: execute_gemm(
+                v, u, mode=mode, mesh=mesh))
+            times[mode] = timeit(fn, V, U, reps=reps)
+        best = min(times, key=times.get)
+        rows.append({
+            "layer": spec.name, "T": T, "C": spec.C, "K": spec.K,
+            **{f"measured_{mm}_us": times[mm] * 1e6 for mm in MODES},
+            "measured_best": best,
+            "measured_speedup_vs_worst": max(times.values()) / times[best],
+        })
+    return rows
+
+
+def run(mesh=(16, 16), *, scale: float = 0.125, reps: int = 3,
+        json_path: str | None = JSON_PATH) -> list[dict]:
     rows = mode_table(TABLE1_LAYERS, m=6, r=3, mesh=mesh)
-    emit(rows, f"fig9: parallel-mode selection on mesh {mesh}")
+    emit(rows, f"fig9: parallel-mode selection on mesh {mesh} (modeled)")
     modes = {r["chosen"] for r in rows}
     print(f"# fig9: modes used across layers: {sorted(modes)} "
           f"(adaptive strategy exercises {len(modes)}/3 modes)\n")
+
+    if jax.device_count() >= MEASURE_DEVICES:
+        mrows = measured_rows(scale=scale, reps=reps)
+        emit(mrows, f"fig9: executed shard_map modes on "
+                    f"{MEASURE_DEVICES}-device host mesh (measured, "
+                    f"spatial x{scale})")
+        # the measured sweep runs at scaled spatial dims / m=4, so its
+        # T/C/K describe a different problem than the modeled columns --
+        # keep only the measurement keys when merging
+        by_layer = {r["layer"]: {k: v for k, v in r.items()
+                                 if k.startswith("measured_")}
+                    for r in mrows}
+        for r in rows:
+            r.update(by_layer.get(r["layer"], {}))
+    else:
+        print(f"# fig9: < {MEASURE_DEVICES} devices -- measured columns "
+              f"skipped (run `python -m benchmarks.fig9_parallel_modes`)\n")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"figure": "fig9_parallel_modes",
+                       "modeled_mesh": list(mesh),
+                       "measured_devices": jax.device_count(),
+                       "rows": rows}, f, indent=1)
+        print(f"# fig9: wrote {json_path}\n")
     return rows
 
 

@@ -2,7 +2,12 @@
 # Fast tier-1 verification subset (same as `make verify`).
 set -e
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -q -x \
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -x \
     tests/test_transforms.py tests/test_blocking.py tests/test_plan.py \
-    tests/test_kernels.py tests/test_conv.py tests/test_optim.py \
-    tests/test_checkpoint_data.py "$@"
+    tests/test_kernels.py tests/test_conv.py tests/test_conv_golden.py \
+    tests/test_optim.py tests/test_checkpoint_data.py "$@"
+# Multi-device parallel execution: separate invocation so the simulated
+# 8-device flag is installed before jax initializes (conftest translates
+# REPRO_HOST_DEVICES into XLA_FLAGS).
+REPRO_HOST_DEVICES=8 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -q -x tests/test_parallel_exec.py "$@"

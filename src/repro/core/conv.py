@@ -18,6 +18,12 @@
 Every decision (algorithm, m, blocking, parallel mode) is made by
 ``plan(spec)`` -- this module only *dispatches* (DESIGN.md SS5).
 
+When a mesh is active -- passed as ``conv2d(..., mesh=...)`` or installed
+ambiently via ``repro.parallel.executor.use_mesh`` (the serving engine
+does this) -- every Winograd-eligible call routes through the executor:
+the Winograd-domain GEMM runs under shard_map with the PartitionSpecs of
+the plan's ``parallel_mode`` (paper C6 executed, DESIGN.md SS6).
+
 Eligibility for Winograd: square filter, r in {2,3,5...}, stride 1, groups 1.
 """
 
@@ -40,6 +46,11 @@ def winograd_eligible(w_shape: tuple, stride: int) -> bool:
     return eligible(w_shape[0], w_shape[1], stride)
 
 
+#: algorithms whose Winograd-domain GEMM the executor can shard.
+_SHARDABLE = ("winograd", "winograd_tewmm", "winograd_nonfused",
+              "winograd_fused", "winograd_fused_e2e")
+
+
 def conv2d(
     x: jax.Array,
     w: jax.Array,
@@ -49,17 +60,46 @@ def conv2d(
     algorithm: Algorithm = "auto",
     m: int | None = None,
     differentiable: bool = True,
+    mesh=None,
+    parallel_mode: str | None = None,
 ) -> jax.Array:
-    """2-D convolution (cross-correlation), NHWC x HWIO -> NHWC."""
+    """2-D convolution (cross-correlation), NHWC x HWIO -> NHWC.
+
+    ``mesh``/``parallel_mode`` activate the sharded execution path; with
+    ``parallel_mode=None`` the mode comes from ``ConvPlan.parallel_mode``.
+    """
+    if mesh is None:
+        from repro.parallel import executor  # deferred: core stays importable
+
+        mesh, ambient_mode = executor.active_mesh()
+        parallel_mode = parallel_mode or ambient_mode
+
     # Only consult the planner when a decision is actually needed: "auto"
-    # dispatch, or a Winograd algorithm called without an explicit m.
-    if algorithm == "auto" or (m is None and algorithm not in ("direct", "im2col")):
+    # dispatch, a Winograd algorithm called without an explicit m, or a
+    # mesh-routed call (shardable, else the mode would be discarded)
+    # without an explicit mode.  Mesh-routed plans are made for the mesh
+    # the conv will execute on -- the mode argmin is mesh-dependent.
+    needs_m = m is None and algorithm not in ("direct", "im2col")
+    needs_mode = (mesh is not None and parallel_mode is None and stride == 1
+                  and (algorithm == "auto" or algorithm in _SHARDABLE))
+    if algorithm == "auto" or needs_m or needs_mode:
+        mesh_shape = (tuple(mesh.shape.get(a, 1) for a in ("data", "model"))
+                      if mesh is not None else None)
         p = plan_for_conv(x.shape, w.shape, stride=stride, pad=pad,
-                          elt_bytes=x.dtype.itemsize)
+                          elt_bytes=x.dtype.itemsize,
+                          **({"mesh": mesh_shape} if mesh_shape else {}))
         if algorithm == "auto":
             algorithm = p.algorithm
         if m is None:
             m = p.m if p.m is not None else 4
+        if needs_mode:
+            parallel_mode = p.parallel_mode
+
+    if mesh is not None and algorithm in _SHARDABLE and stride == 1:
+        from repro.kernels import ops  # deferred: keeps core importable w/o kernels
+
+        return ops.conv2d_sharded(x, w, m=m, pad=pad, mesh=mesh,
+                                  mode=parallel_mode or "data")
 
     if algorithm == "direct":
         return wg.direct_conv2d(x, w, pad=pad, stride=stride)

@@ -169,10 +169,16 @@ def plan(spec: ConvSpec, *, candidates: tuple[int, ...] = (2, 4, 6),
 
 
 def plan_for_conv(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
-                  elt_bytes: int = 4) -> ConvPlan:
-    """Convenience entry used by ``core.conv.conv2d``."""
+                  elt_bytes: int = 4,
+                  mesh: tuple[int, ...] = hw.POD_MESH) -> ConvPlan:
+    """Convenience entry used by ``core.conv.conv2d``.
+
+    ``mesh`` is the (dp, tp) extent the conv will actually execute on --
+    the parallel-mode argmin is mesh-dependent, so a mesh-routed call
+    must plan for its own mesh, not the production default.
+    """
     return plan(ConvSpec.for_conv(x_shape, w_shape, stride=stride, pad=pad,
-                                  elt_bytes=elt_bytes))
+                                  elt_bytes=elt_bytes), mesh=tuple(mesh))
 
 
 def plan_cache_info():

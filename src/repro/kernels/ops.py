@@ -80,6 +80,15 @@ def conv2d_pallas(
     N, H, W, C = x.shape
     K = w.shape[-1]
 
+    # Winograd-domain tensors are held in f32 for sub-f32 inputs: the
+    # transform matrices amplify operand rounding by O(2^m) (A^T rows for
+    # F(6,3) reach 32), so a bf16 U or V costs ~3 output digits while the
+    # input storage rounding itself is benign.  Matches the reference
+    # path's compute_dtype and the paper's fp32-throughout arithmetic.
+    out_dtype = x.dtype
+    if x.dtype.itemsize < 4:
+        x, w = x.astype(jnp.float32), w.astype(jnp.float32)
+
     # ---- tile extraction (OLA) ----
     xp, tH, tW, P, Q = tiling.pad_for_tiles(x, m, r, pad)
     d = tiling.flatten_tiles(tiling.extract_tiles(xp, m, r, tH, tW))
@@ -110,7 +119,7 @@ def conv2d_pallas(
         y = wino_fused_e2e(
             d, U, m=m, r=r,
             block_t=cfg.block_t, block_k=cfg.block_k, block_c=cfg.block_c,
-            interpret=interpret, out_dtype=x.dtype,
+            interpret=interpret, out_dtype=out_dtype,
         )
     else:
         # ---- input transform (separate HBM round trip for V) ----
@@ -121,7 +130,7 @@ def conv2d_pallas(
             y = wino_fused(
                 V, U, m=m, r=r,
                 block_t=cfg.block_t, block_k=cfg.block_k, block_c=cfg.block_c,
-                interpret=interpret, out_dtype=x.dtype,
+                interpret=interpret, out_dtype=out_dtype,
             )
         else:
             O_hat = wino_gemm(
@@ -132,12 +141,53 @@ def conv2d_pallas(
             y = output_transform(
                 O_hat, m=m, r=r,
                 block_t=cfg.block_t, block_k=cfg.block_k,
-                interpret=interpret, out_dtype=x.dtype,
+                interpret=interpret, out_dtype=out_dtype,
             )
 
     # ---- crop padding, assemble spatial output ----
     y = y[:T, :, :K].reshape(T, m, m, K)
     return tiling.assemble_output(y, N, tH, tW, P, Q)
+
+
+# ----------------------- sharded (mesh) pipeline -----------------------
+#
+# The distributed form of the same contract: tile extraction and the
+# (linear, cheap) transforms run as jnp ops, and the Winograd-domain
+# batched GEMM -- the paper's dominant stage -- executes under shard_map
+# with the PartitionSpecs of the plan's parallel mode
+# (``repro.parallel.executor``, DESIGN.md SS6).  jnp transforms rather
+# than the Pallas ones because the sharded path must run on any mesh
+# (simulated host CPUs included) without interpret-mode overhead inside
+# every shard; on TPU the executor's local_fn hook swaps the per-shard
+# matmul for the fused kernel.
+
+
+@functools.partial(jax.jit, static_argnames=("m", "pad", "mode", "mesh"))
+def conv2d_sharded(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    m: int,
+    pad: int = 0,
+    mesh,
+    mode: str = "data",
+) -> jax.Array:
+    """Winograd conv with the GEMM sharded over ``mesh`` per ``mode``."""
+    from repro.core import winograd as wg
+    from repro.parallel.executor import execute_gemm
+
+    r = w.shape[0]
+    assert w.shape[0] == w.shape[1]
+    in_dtype = x.dtype
+    x32, w32 = x.astype(jnp.float32), w.astype(jnp.float32)
+    N = x.shape[0]
+    xp, tH, tW, P, Q = tiling.pad_for_tiles(x32, m, r, pad)
+    d = tiling.flatten_tiles(tiling.extract_tiles(xp, m, r, tH, tW))
+    V = wg.input_transform(d, m, r)                    # (L, T, C)
+    U = wg.filter_transform(w32, m, r)                 # (L, C, K)
+    O_hat = execute_gemm(V, U, mode=mode, mesh=mesh)   # (L, T, K) f32
+    y = wg.output_transform(O_hat, m, r)               # (T, m, m, K)
+    return tiling.assemble_output(y, N, tH, tW, P, Q).astype(in_dtype)
 
 
 # --------------------- differentiable wrapper ---------------------

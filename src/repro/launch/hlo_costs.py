@@ -154,14 +154,22 @@ def parse_computations(hlo: str) -> dict[str, Computation]:
     return comps
 
 
+_TRIP_CFG_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
 def _trip_count(cond: Computation) -> int:
-    """Recover the loop bound from the condition region's ROOT compare."""
+    """Recover the loop bound from the condition region's ROOT compare.
+
+    Operands carry their type in current HLO text ("s32[] %constant.23"),
+    so names are pulled out by token, not by stripping a leading '%'.
+    """
     consts = dict(_CONST_RE.findall("\n".join(cond.raw)))
     for line in cond.raw:
         m = _COMPARE_RE.search(line)
         if m:
-            for operand in m.group(1).split(","):
-                name = operand.strip().lstrip("%")
+            # '%' optional: some dumps omit sigils; type tokens that slip
+            # through never collide with constant names
+            for name in re.findall(r"%?([\w.\-]+)", m.group(1)):
                 if name in consts:
                     return int(consts[name])
     # fall back: any s32 constant in the region (scan bounds), else 1
@@ -195,7 +203,13 @@ def multiplicities(comps: dict[str, Computation], entry: str) -> dict[str, float
                     cm = re.search(r"condition=%?([\w.\-]+)", op.line)
                     body = bm.group(1) if bm else None
                     cond = cm.group(1) if cm else None
-                trip = _trip_count(comps[cond]) if cond in comps else 1
+                # XLA stamps the resolved bound on the while op itself;
+                # prefer it over re-deriving from the condition region.
+                cfg = _TRIP_CFG_RE.search(op.line)
+                if cfg:
+                    trip = int(cfg.group(1))
+                else:
+                    trip = _trip_count(comps[cond]) if cond in comps else 1
                 if cond:
                     visit(cond, m * (trip + 1), depth + 1)
                 if body:
@@ -221,10 +235,16 @@ def _dot_flops(op: Op, shapes: dict[str, str]) -> float:
         res_elems *= d
     # contracted extent from lhs shape + lhs_contracting_dims
     cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
-    args = re.search(r"dot\(\s*%?([\w.\-]+)", op.line)
+    # operands carry their type ("dot(f32[64,64]{1,0} %lhs, ...)"), and
+    # some dumps omit the '%' sigil; the lhs is the first operand token
+    # that names a known op ('%'-sigiled tokens tried first, since type
+    # and dim tokens can in principle shadow short numeric op names)
+    args = re.search(r"\bdot\(([^)]*)\)", op.line)
     contract = 1
     if cm and args:
-        lhs_shape = shapes.get(args.group(1))
+        tokens = (re.findall(r"%([\w.\-]+)", args.group(1))
+                  or re.findall(r"([\w.\-]+)", args.group(1)))
+        lhs_shape = next((shapes[t] for t in tokens if t in shapes), None)
         dims = _first_shape_dims(lhs_shape or "") or []
         for idx in cm.group(1).split(","):
             if idx and int(idx) < len(dims):

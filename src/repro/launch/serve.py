@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro import configs
 from repro.launch.mesh import make_host_mesh
 from repro.models.api import build
+from repro.parallel.compat import set_mesh
 from repro.serve import ServeEngine
 
 
@@ -33,7 +34,7 @@ def main() -> int:
            else configs.get_config(args.arch))
     api = build(cfg)
     mesh = make_host_mesh(tp=args.tp)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = api.init(jax.random.PRNGKey(0))
         engine = ServeEngine(api, params,
                              max_len=args.prompt_len + args.new_tokens)

@@ -19,6 +19,7 @@ from repro.data import SyntheticTokens
 from repro.launch.mesh import make_host_mesh
 from repro.launch.workloads import make_optimizer_for
 from repro.models.api import build
+from repro.parallel.compat import set_mesh
 from repro.train import Trainer, TrainerConfig, build_train_step, init_state
 
 
@@ -59,7 +60,7 @@ def main() -> int:
                            global_batch=args.batch, seed=args.seed,
                            extras=extras)
     step_fn = build_train_step(api, opt, microbatches=args.microbatches)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         state = init_state(api, opt, jax.random.PRNGKey(args.seed))
         trainer = Trainer(step_fn, pipe, TrainerConfig(
             total_steps=args.steps, ckpt_dir=args.ckpt_dir,

@@ -47,7 +47,6 @@ def mesh_view(mesh, mode: str):
     import numpy as np
 
     devices = np.asarray(mesh.devices)
-    axis_types = (jax.sharding.AxisType.Auto,)
     if "pod" in mesh.axis_names:
         pod = mesh.shape["pod"]
         rest = devices.reshape(pod, -1)
@@ -57,8 +56,7 @@ def mesh_view(mesh, mode: str):
             shape, names = (pod, 1, rest.shape[1]), ("pod", "data", "model")
         else:
             return mesh
-        return jax.sharding.Mesh(devices.reshape(shape), names,
-                                 axis_types=axis_types * 3)
+        return _mesh_of(devices.reshape(shape), names)
     n = devices.size
     if mode == "dp":
         shape, names = (n, 1), ("data", "model")
@@ -66,8 +64,16 @@ def mesh_view(mesh, mode: str):
         shape, names = (1, n), ("data", "model")
     else:
         return mesh
-    return jax.sharding.Mesh(devices.reshape(shape), names,
-                             axis_types=axis_types * 2)
+    return _mesh_of(devices.reshape(shape), names)
+
+
+def _mesh_of(devices, names):
+    from repro.parallel.compat import axis_types_auto
+
+    types = axis_types_auto(len(names))
+    if types is None:
+        return jax.sharding.Mesh(devices, names)
+    return jax.sharding.Mesh(devices, names, axis_types=types)
 
 
 def _lm_plan(cfg: ModelConfig, shape: str):
@@ -209,15 +215,17 @@ def build_workload(cfg: ModelConfig, shape: str, mesh,
 def lower_workload(wl: Workload, mesh=None):
     """jit + lower under the mesh context; returns the Lowered object.
 
-    ``jax.set_mesh`` (not ``with mesh:``) -- only set_mesh installs the
-    abstract mesh that makes in-model ``with_sharding_constraint`` calls
+    ``compat.set_mesh`` (not a bare ``with mesh:`` on new JAX) -- only the
+    ambient-mesh context makes in-model ``with_sharding_constraint`` calls
     (and the vocab-parallel shard_map) resolve during tracing.
     """
+    from repro.parallel.compat import set_mesh
+
     fn = jax.jit(
         wl.fn,
         in_shardings=wl.in_shardings,
         out_shardings=wl.out_shardings,
         donate_argnums=wl.donate,
     )
-    with jax.set_mesh(wl.mesh if wl.mesh is not None else mesh):
+    with set_mesh(wl.mesh if wl.mesh is not None else mesh):
         return fn.lower(*wl.abstract_args)

@@ -1,0 +1,91 @@
+"""JAX version compatibility for the mesh / shard_map API surface.
+
+The codebase is written against the current mesh API (``jax.set_mesh``,
+``jax.shard_map``, ``jax.sharding.get_abstract_mesh``,
+``jax.sharding.AxisType``).  The pinned container ships JAX 0.4.37, where
+the same machinery exists under the older spellings: the ambient mesh is
+the ``with mesh:`` thread-resources context, shard_map lives in
+``jax.experimental.shard_map`` (with ``check_rep`` instead of
+``check_vma``), and ``Mesh``/``make_mesh`` take no ``axis_types``.
+
+This module is the ONLY place that branches on the JAX version; every
+consumer (``parallel/sharding.py``, ``parallel/executor.py``,
+``models/layers.py``, ``models/moe.py``, ``optim/compress.py``, the launch
+drivers) imports the four names below and stays version-blind.  On new-API
+JAX every function delegates 1:1, so behaviour there is unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+__all__ = ["get_abstract_mesh", "shard_map", "set_mesh", "make_mesh",
+           "axis_types_auto"]
+
+# jax.sharding uses module-level __getattr__ deprecation shims, so a plain
+# getattr with a default is the reliable feature probe.
+_NEW_GAM = getattr(jax.sharding, "get_abstract_mesh", None)
+_NEW_SHARD_MAP = getattr(jax, "shard_map", None)
+_NEW_SET_MESH = getattr(jax, "set_mesh", None)
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def get_abstract_mesh():
+    """The ambient mesh, or None when no mesh context is active.
+
+    New JAX: ``jax.sharding.get_abstract_mesh()`` (set by ``jax.set_mesh``).
+    JAX 0.4.x: the ``with mesh:`` thread-resources mesh.  Both returns
+    expose ``.axis_names`` and the name->size ``.shape`` mapping, which is
+    all the consumers touch; callers must treat an empty ``axis_names`` as
+    "no mesh" (``parallel.sharding._active_mesh`` does).
+    """
+    if _NEW_GAM is not None:
+        return _NEW_GAM()
+    from jax._src import mesh as mesh_lib
+
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def shard_map(f, *, mesh=None, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` with the 0.4.x fallback (check_vma -> check_rep)."""
+    if mesh is None:
+        mesh = get_abstract_mesh()
+    if _NEW_SHARD_MAP is not None:
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return _NEW_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    New JAX: ``jax.set_mesh`` (also installs the sharding context for jit).
+    JAX 0.4.x: ``with mesh:`` -- the pjit mesh context, which is what makes
+    bare-PartitionSpec ``with_sharding_constraint`` and the thread-resources
+    lookup above work.
+    """
+    if mesh is None:
+        return contextlib.nullcontext()
+    if _NEW_SET_MESH is not None:
+        return _NEW_SET_MESH(mesh)
+    return mesh  # Mesh is a context manager on 0.4.x
+
+
+def axis_types_auto(n: int):
+    """(AxisType.Auto,) * n on new JAX; None where AxisType is absent."""
+    if _AXIS_TYPE is None:
+        return None
+    return (_AXIS_TYPE.Auto,) * n
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None):
+    """``jax.make_mesh`` that drops ``axis_types`` on 0.4.x."""
+    if axis_types is not None and _AXIS_TYPE is not None:
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types)
+    return jax.make_mesh(axis_shapes, axis_names)

@@ -67,7 +67,6 @@ def mode_cost(
     elif mode == "model":
         # C x K over the model axis; tiles replicated along it.
         # partial outputs all-reduced over tp; V broadcast along tp.
-        t_comp = flops / (P * flops_per_s) * (P / (dp * tp))  # = /P
         t_comp = flops / (dp * tp * flops_per_s)
         ar = 2.0 * L * (T / dp) * K * elt / link_bw          # ring AR
         bcast = L * (T / dp) * C * elt / link_bw

@@ -100,13 +100,30 @@ class ConvServeEngine:
 
     ``forward(params, images, *, algorithm=...)`` is any of the
     ``models.cnn`` forwards (or a compatible callable).
+
+    ``mesh`` scales the engine out: the image batch is sharded over the
+    mesh's "data" axis (degrading to replicated when the batch does not
+    divide it) and -- via ``repro.parallel.executor.use_mesh`` at trace
+    time -- every Winograd-eligible conv inside ``forward`` executes its
+    Winograd-domain GEMM under shard_map with the plan's per-layer
+    parallel mode.  The jit cache entry keeps its sharded form, so
+    steady-state requests pay neither selection nor re-partitioning cost.
     """
 
-    def __init__(self, forward, params: Any, *, algorithm: str = "auto"):
+    def __init__(self, forward, params: Any, *, algorithm: str = "auto",
+                 mesh=None):
         self.forward = forward
         self.params = params
         self.algorithm = algorithm
+        self.mesh = mesh
         self._compiled: dict = {}
+
+    def _shard_batch(self, images: jax.Array) -> jax.Array:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        dp = self.mesh.shape.get("data", 1)
+        spec = P("data") if images.shape[0] % dp == 0 else P()
+        return jax.device_put(images, NamedSharding(self.mesh, spec))
 
     def infer(self, images: jax.Array) -> jax.Array:
         """(B, H, W, C) -> logits; compiles once per input signature."""
@@ -116,7 +133,12 @@ class ConvServeEngine:
             fn = jax.jit(functools.partial(self.forward,
                                            algorithm=self.algorithm))
             self._compiled[key] = fn
-        return fn(self.params, images)
+        if self.mesh is None:
+            return fn(self.params, images)
+        from repro.parallel.executor import use_mesh
+
+        with use_mesh(self.mesh):
+            return fn(self.params, self._shard_batch(images))
 
     @property
     def compiled_signatures(self) -> int:

@@ -1,0 +1,74 @@
+"""Golden tests at the conv2d API boundary.
+
+Every public algorithm vs ``jax.lax.conv_general_dilated`` (the golden
+reference), across dtypes (fp32 / bf16) and odd, non-tile-aligned H/W --
+the contract a serving stack depends on: whatever the planner or a caller
+picks, the numbers match the framework convolution.
+
+Pipelines run with m=2 here to keep interpret-mode Pallas cheap; deeper
+F(4,3)/F(6,3) kernel coverage lives in test_conv.py / test_plan.py, and
+"auto" exercises whatever the planner picks for the shape.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import conv2d
+
+ALGOS = ["im2col", "winograd", "winograd_nonfused", "winograd_fused",
+         "winograd_fused_e2e", "auto"]
+
+# odd H/W, prime-ish channels: every tile edge is ragged
+SHAPES = [(1, 13, 17, 5, 7), (2, 9, 11, 3, 8)]
+
+TOL = {
+    "float32": dict(atol=5e-4, rtol=2e-3),
+    # bf16 storage: ~8 bits of mantissa on the inputs/outputs; transforms
+    # and GEMM accumulate in f32 underneath.
+    "bfloat16": dict(atol=7e-2, rtol=5e-2),
+}
+
+
+def _golden(x, w, pad):
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32), (1, 1),
+        ((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y.astype(x.dtype)
+
+
+def _data(N, H, W, C, K, dtype, seed=0):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (N, H, W, C), jnp.float32).astype(dtype)
+    w = jax.random.uniform(kw, (3, 3, C, K), jnp.float32, -1, 1).astype(dtype)
+    return x, w
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("shape", SHAPES, ids=["13x17", "9x11"])
+@pytest.mark.parametrize("algorithm", ALGOS)
+def test_conv2d_golden(algorithm, shape, dtype):
+    N, H, W, C, K = shape
+    x, w = _data(N, H, W, C, K, jnp.dtype(dtype), seed=H * W)
+    ref = _golden(x, w, pad=1)
+    m = None if algorithm == "auto" else 2
+    got = conv2d(x, w, pad=1, algorithm=algorithm, m=m, differentiable=False)
+    assert got.shape == ref.shape and got.dtype == ref.dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_conv2d_golden_no_pad_even_channels(dtype):
+    """pad=0 slice + MXU-friendly channel counts (the planner fast path)."""
+    x, w = _data(1, 15, 15, 8, 16, jnp.dtype(dtype), seed=3)
+    ref = _golden(x, w, pad=0)
+    for algorithm in ("auto", "winograd_fused"):
+        got = conv2d(x, w, pad=0, algorithm=algorithm,
+                     m=None if algorithm == "auto" else 2,
+                     differentiable=False)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(ref, np.float32),
+            err_msg=algorithm, **TOL[dtype])

@@ -1,18 +1,20 @@
 PYTHONPATH := src
 PYTEST := PYTHONPATH=$(PYTHONPATH) python -m pytest
+PY := PYTHONPATH=$(PYTHONPATH) python
 
 # Fast tier-1 subset: conv/kernel/plan/blocking correctness + unit layers,
-# then the multi-device parallel-execution module in its own pytest
-# invocation with 8 simulated host devices (the flag must be set before
-# jax initializes, so it cannot share a process with the main subset).
-# `slow`-marked sweeps are deselected by pytest.ini; this target further
-# restricts to the modules that gate every PR (finishes in ~6 min).
+# then the multi-device modules (parallel execution + sharded gradients)
+# in their own pytest invocation with 8 simulated host devices (the flag
+# must be set before jax initializes, so it cannot share a process with
+# the main subset).  `slow`-marked sweeps are deselected by pytest.ini;
+# this target further restricts to the modules that gate every PR.
 verify:
 	$(PYTEST) -q -x tests/test_transforms.py tests/test_blocking.py \
 	    tests/test_plan.py tests/test_kernels.py tests/test_conv.py \
 	    tests/test_conv_golden.py tests/test_optim.py \
 	    tests/test_checkpoint_data.py
-	REPRO_HOST_DEVICES=8 $(PYTEST) -q -x tests/test_parallel_exec.py
+	REPRO_HOST_DEVICES=8 $(PYTEST) -q -x tests/test_parallel_exec.py \
+	    tests/test_conv_grad.py
 
 # Full tier-1 (slow sweeps still deselected by default addopts)
 test:
@@ -23,6 +25,19 @@ test-all:
 	$(PYTEST) -q -m ""
 
 bench-traffic:
-	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.fig7_fused_traffic
+	$(PY) -m benchmarks.fig7_fused_traffic
 
-.PHONY: verify test test-all bench-traffic
+# CI smoke benchmarks: small-scale runs of the traffic, parallel-mode and
+# train-step figures so every CI run produces the BENCH_*.json trajectory
+# files.  fig9's measured columns need the simulated-device flag in the
+# environment BEFORE jax initializes, hence the env prefix.
+bench-smoke:
+	$(PY) -c "from benchmarks.fig7_fused_traffic import run; \
+	    run(scale=0.0625)"
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" $(PY) -c \
+	    "from benchmarks.fig9_parallel_modes import run; \
+	    run(scale=0.0625, reps=1)"
+	$(PY) -c "from benchmarks.fig_train_step import run; \
+	    run(scale=0.0625, reps=1)"
+
+.PHONY: verify test test-all bench-traffic bench-smoke

@@ -1,0 +1,119 @@
+"""Training-step benchmark: Winograd dL/dw vs XLA's filter-gradient conv.
+
+The backward-pass counterpart of fig6/fig7: for every Table-1 layer the
+filter gradient is computed two ways --
+
+  winograd_dw   the exact F(r, m) filter-gradient pipeline (DESIGN.md SS8):
+                x-side B^T d B transform (shared with the forward), gy-side
+                G' gy G'^T transform, L-batched GEMM contracting the tile
+                axis, inverse onto the r x r taps
+  xla_dw        ``jax.vjp`` of ``lax.conv_general_dilated`` w.r.t. the
+                HWIO filter (the transposed-convolution baseline the VJP
+                used before this pipeline existed)
+
+both as XLA-compiled jnp functions (the CPU-host methodology of
+benchmarks/common.py: arithmetic-reduction and fusion effects measured for
+real, Pallas kernel performance modeled separately), plus a full
+fwd+bwd(dx, dw) step per layer through each stack.  A correctness column
+reports the max |winograd_dw - xla_dw| so the table is self-validating.
+
+Emits ``BENCH_train_step.json`` for CI tracking.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import winograd as wg
+from repro.core.plan import ConvSpec, grad_plan
+
+from .common import emit, scaled_layers, timeit
+
+JSON_PATH = "BENCH_train_step.json"
+
+
+def _xla_conv(x, w, pad):
+    return jax.lax.conv_general_dilated(
+        x, w, (1, 1), ((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _xla_dw(x, gy, w_shape, pad):
+    _, vjp = jax.vjp(lambda w_: _xla_conv(x, w_, pad),
+                     jnp.zeros(w_shape, jnp.float32))
+    return vjp(gy)[0]
+
+
+def run(scale: float = 0.125, *, reps: int = 3,
+        json_path: str | None = JSON_PATH) -> list[dict]:
+    r = 3
+    rows = []
+    for spec in scaled_layers(scale):
+        gp = grad_plan(ConvSpec(N=1, H=spec.H, W=spec.W, C=spec.C, K=spec.K,
+                                r=r, pad=spec.pad))
+        m = gp.m if gp.m is not None else 4
+        kx, kw, kg = jax.random.split(jax.random.PRNGKey(spec.C), 3)
+        x = jax.random.normal(kx, (1, spec.H, spec.W, spec.C), jnp.float32)
+        w = jax.random.normal(kw, (r, r, spec.C, spec.K), jnp.float32)
+        w = w / np.sqrt(r * r * spec.C)
+        P = spec.H + 2 * spec.pad - r + 1
+        Q = spec.W + 2 * spec.pad - r + 1
+        gy = jax.random.normal(kg, (1, P, Q, spec.K), jnp.float32)
+
+        # ---- dw alone: the contested GEMM ----
+        wino_dw = jax.jit(lambda x_, gy_: wg.winograd_filter_grad_reference(
+            x_, gy_, r=r, m=m, pad=spec.pad))
+        xla_dw = jax.jit(lambda x_, gy_: _xla_dw(x_, gy_, w.shape, spec.pad))
+        t_wino = timeit(wino_dw, x, gy, reps=reps)
+        t_xla = timeit(xla_dw, x, gy, reps=reps)
+        err = float(jnp.max(jnp.abs(wino_dw(x, gy) - xla_dw(x, gy))))
+
+        # ---- full train step: fwd + (dx, dw), both stacks ----
+        def wino_step(x_, w_):
+            y = wg.winograd_conv2d_reference(x_, w_, m, pad=spec.pad)
+            return jnp.sum(y * y)
+
+        def xla_step(x_, w_):
+            y = _xla_conv(x_, w_, spec.pad)
+            return jnp.sum(y * y)
+
+        g_wino = jax.jit(jax.grad(wino_step, argnums=(0, 1)))
+        g_xla = jax.jit(jax.grad(xla_step, argnums=(0, 1)))
+        t_step_wino = timeit(g_wino, x, w, reps=reps)
+        t_step_xla = timeit(g_xla, x, w, reps=reps)
+
+        T, _, _ = gp.spec.tiles(m)
+        rows.append({
+            "layer": spec.name, "H": spec.H, "C": spec.C, "K": spec.K,
+            "m": m, "T": T,
+            "dw_blocks": (f"{gp.dw_blocks.block_t}/{gp.dw_blocks.block_c}/"
+                          f"{gp.dw_blocks.block_k}" if gp.dw_blocks else None),
+            "wino_dw_ms": t_wino * 1e3,
+            "xla_dw_ms": t_xla * 1e3,
+            "dw_speedup": t_xla / t_wino,
+            "step_wino_ms": t_step_wino * 1e3,
+            "step_xla_ms": t_step_xla * 1e3,
+            "step_speedup": t_step_xla / t_step_wino,
+            "max_abs_err": err,
+        })
+    emit(rows, f"fig_train_step: Winograd dw vs XLA dw per Table-1 layer "
+               f"(spatial x{scale})")
+    faster = sum(1 for row in rows if row["dw_speedup"] > 1.0)
+    print(f"# fig_train_step: winograd dw faster on {faster}/{len(rows)} "
+          f"layers (CPU-host wall clock; TPU-kernel story is modeled in "
+          f"the grad plan)\n")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"figure": "fig_train_step", "scale": scale,
+                       "rows": rows}, f, indent=2)
+        print(f"# fig_train_step: wrote {json_path}\n")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -22,7 +22,11 @@ When a mesh is active -- passed as ``conv2d(..., mesh=...)`` or installed
 ambiently via ``repro.parallel.executor.use_mesh`` (the serving engine
 does this) -- every Winograd-eligible call routes through the executor:
 the Winograd-domain GEMM runs under shard_map with the PartitionSpecs of
-the plan's ``parallel_mode`` (paper C6 executed, DESIGN.md SS6).
+the plan's ``parallel_mode`` (paper C6 executed, DESIGN.md SS6).  The
+mesh path is differentiable end to end: ``differentiable=True`` (the
+default) binds a custom VJP whose dx and dw GEMMs also run under the
+executor, with the backward-aware PartitionSpecs dual to the forward
+mode (DESIGN.md SS8) -- training never differentiates through shard_map.
 
 Eligibility for Winograd: square filter, r in {2,3,5...}, stride 1, groups 1.
 """
@@ -98,6 +102,12 @@ def conv2d(
     if mesh is not None and algorithm in _SHARDABLE and stride == 1:
         from repro.kernels import ops  # deferred: keeps core importable w/o kernels
 
+        if differentiable:
+            # custom VJP: dx and dw run under the backward-aware
+            # PartitionSpecs of the mode (never differentiate-through-
+            # shard_map; DESIGN.md SS8)
+            return ops.conv2d_sharded_ad(x, w, m, pad, mesh,
+                                         parallel_mode or "data")
         return ops.conv2d_sharded(x, w, m=m, pad=pad, mesh=mesh,
                                   mode=parallel_mode or "data")
 

@@ -185,8 +185,117 @@ def plan_cache_info():
     return _plan.cache_info()
 
 
+def grad_plan_cache_info():
+    return _grad_plan.cache_info()
+
+
 def clear_plan_cache() -> None:
     _plan.cache_clear()
+    _grad_plan.cache_clear()
+
+
+# ------------------------- gradient planning (SS8) -------------------------
+#
+# The backward pass runs two more Winograd-shaped workloads per conv:
+#
+#   dx -- a full-correlation of gy with the rotated, C/K-swapped filter:
+#         literally another conv2d problem, so its plan IS a forward
+#         ConvPlan for the (gy, w_rot) shapes;
+#   dw -- the F(r, m) filter-gradient GEMM dU(L, C, K) = X~(L, C, T) x
+#         Gy(L, T, K): the same batched-GEMM core with the contraction
+#         moved to T, so its blocking reuses ``choose_blocks`` with the
+#         (rows, contraction, cols) = (C, T, K) role mapping.
+#
+# Like forward plans, gradient plans are resolved once per layer shape and
+# lru-cached -- a training run re-traces the same conv shapes every step,
+# so the backward decisions must be one dict lookup, not a re-derivation.
+
+
+@dataclasses.dataclass(frozen=True)
+class GradPlan:
+    """Resolved backward-pass decisions for one conv2d problem."""
+
+    spec: ConvSpec                        # the FORWARD problem
+    algorithm: str                        # "winograd_grad" | "direct"
+    m: int | None                         # F(r, m) tile size for dw (None: XLA)
+    dw_blocks: blocking.BlockConfig | None  # dU-GEMM blocking, (C, T, K) roles
+    dx: ConvPlan | None                   # plan for the rotated-filter dx conv
+    t_est: float                          # modeled dw step seconds
+    flops: int                            # dw GEMM + transform FLOPs
+
+
+def _grad_direct(spec: ConvSpec) -> GradPlan:
+    return GradPlan(spec, "direct", None, None, None, 0.0, 0)
+
+
+@functools.lru_cache(maxsize=4096)
+def _grad_plan(spec: ConvSpec, candidates: tuple[int, ...],
+               mesh: tuple[int, ...]) -> GradPlan:
+    if not spec.winograd_eligible:
+        return _grad_direct(spec)
+    elt = spec.elt_bytes
+    r = spec.r
+    P = max(spec.H + 2 * spec.pad - r + 1, 1)
+    Q = max(spec.W + 2 * spec.pad - r + 1, 1)
+    best: tuple[float, int, blocking.BlockConfig] | None = None
+    for m in candidates:
+        a = m + r - 1
+        L = a * a
+        T, _, _ = spec.tiles(m)
+        # dU GEMM: rows=C, contraction=T, cols=K
+        cfg = blocking.choose_blocks(spec.C, T, spec.K, m, r, elt,
+                                     pipeline="nonfused")
+        if cfg is None:
+            continue
+        gemm = 2 * L * T * spec.C * spec.K
+        # transform flops: x-side (shared with fwd) + gy-side + inverse
+        tr = 2 * T * spec.C * (a * a * a * 2) + 2 * T * spec.K * (a * m * (m + a)) \
+            + 2 * spec.C * spec.K * (a * r * (a + r))
+        flops = gemm + tr
+        # traffic: d tiles + gy tiles + GEMM streams + dU + dw
+        bytes_ = (T * L * spec.C + T * m * m * spec.K) * elt \
+            + cfg.hbm_bytes_nonfused
+        t = max(flops / hw.PEAK_FLOPS_F32, bytes_ / hw.HBM_BW)
+        if best is None or t < best[0]:
+            best = (t, m, cfg, flops)
+    if best is None:
+        return _grad_direct(spec)
+    t, m, cfg, flops = best
+    # dx: a forward-planned conv of gy (N, P, Q, K) with w_rot (r, r, K, C).
+    # pad >= r makes the effective backward pad negative; the kernel layer
+    # computes with max(pad_b, 0) and crops, so plan for that padding.
+    dx_plan = plan(ConvSpec(N=spec.N, H=P, W=Q, C=spec.K, K=spec.C, r=r,
+                            pad=max(r - 1 - spec.pad, 0), elt_bytes=elt),
+                   candidates=candidates, mesh=mesh)
+    return GradPlan(spec, "winograd_grad", m, cfg, dx_plan, t, flops)
+
+
+def grad_plan(spec: ConvSpec, *, candidates: tuple[int, ...] = (2, 4, 6),
+              mesh: tuple[int, ...] = hw.POD_MESH) -> GradPlan:
+    """The backward-pass decision point: ConvSpec -> cached GradPlan."""
+    return _grad_plan(spec, tuple(candidates), tuple(mesh))
+
+
+def grad_plan_for_conv(x_shape, w_shape, *, stride: int = 1, pad: int = 0,
+                       elt_bytes: int = 4,
+                       mesh: tuple[int, ...] = hw.POD_MESH) -> GradPlan:
+    """Convenience entry mirroring ``plan_for_conv`` for the backward pass."""
+    return grad_plan(ConvSpec.for_conv(x_shape, w_shape, stride=stride,
+                                       pad=pad, elt_bytes=elt_bytes),
+                     mesh=tuple(mesh))
+
+
+def grad_kernel_blocks(C: int, T: int, K: int, m: int, r: int,
+                       elt_bytes: int) -> blocking.BlockConfig:
+    """Blocking for the dU(L, C, K) = X~(L, C, T) x Gy(L, T, K) GEMM.
+
+    The plan-layer entry for ``kernels.ops.conv2d_filter_grad`` (which sees
+    the GEMM extents, not N/H/W): rows=C, contraction=T, cols=K mapped onto
+    ``choose_blocks``' (T, C, K) slots.
+    """
+    cfg = blocking.choose_blocks(C, T, K, m, r, elt_bytes, pipeline="nonfused")
+    assert cfg is not None
+    return cfg
 
 
 def kernel_blocks(T: int, C: int, K: int, m: int, r: int, elt_bytes: int,

@@ -75,6 +75,22 @@ def assemble_output(y: jax.Array, N: int, tH: int, tW: int, P: int, Q: int) -> j
     return y[:, :P, :Q, :]
 
 
+def extract_output_tiles(gy: jax.Array, m: int, tH: int, tW: int) -> jax.Array:
+    """(N, P, Q, K) -> (T, m, m, K): the exact inverse of ``assemble_output``.
+
+    Output-domain tiles are NON-overlapping m x m blocks; positions beyond
+    the true (P, Q) extent are zero-filled, which is numerically free
+    through the bilinear algorithm (the backward analogue of the forward's
+    edge-tile zero-padding).  Used by the F(r, m) filter-gradient pipeline,
+    which pairs each forward input tile d_t with its output-gradient tile.
+    """
+    N, P, Q, K = gy.shape
+    gy = jnp.pad(gy, ((0, 0), (0, tH * m - P), (0, tW * m - Q), (0, 0)))
+    gy = gy.reshape(N, tH, m, tW, m, K)
+    gy = jnp.transpose(gy, (0, 1, 3, 2, 4, 5))  # (N, tH, tW, m, m, K)
+    return gy.reshape(N * tH * tW, m, m, K)
+
+
 # ------------------------------ 1-D variant ------------------------------
 # Used by the Whisper conv frontend (k=3, stride 1): the one assigned arch
 # where the paper's technique applies natively (DESIGN.md SSArch-applicability).

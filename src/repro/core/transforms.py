@@ -179,6 +179,44 @@ def transform_arrays(m: int, r: int, dtype_name: str = "float32"):
     return tr.as_float(np.dtype(dtype_name))
 
 
+# ------------------------- F(r, m): the gradient dual -------------------------
+#
+# The filter gradient of a Winograd convolution is itself a Winograd
+# convolution with the roles of filter and output exchanged: each forward
+# tile contributes the valid correlation of its (alpha x alpha) input tile d
+# with its (m x m) output-gradient tile gy, producing an (r x r) partial
+# filter gradient -- i.e. the minimal algorithm F(r, m) with output size r,
+# "filter" size m, and the SAME tile size alpha = m + r - 1 as the forward.
+#
+# Because alpha (and hence the evaluation-point set) is shared, the Cook-Toom
+# construction gives F(r, m) matrices that are the forward's in dual roles:
+#
+#   B^T_{F(r,m)} == B^T_{F(m,r)}            (depends only on the points)
+#   G_{F(r,m)}   == D . A_{F(m,r)}          (gy-side transform; D = diag(1/N_i))
+#   A^T_{F(r,m)} == G^T_{F(m,r)} . D^{-1}   (inverse onto the r x r tap grid)
+#
+# and since the D / D^{-1} pair cancels through the element-wise product
+# channel, the F(r, m) pipeline is algebraically the exact adjoint of the
+# forward's bilinear form -- the filter gradient is exact in exact
+# arithmetic, not an approximation (DESIGN.md SS8).
+
+
+def grad_cook_toom(m: int, r: int) -> WinogradTransform:
+    """Exact F(r, m) transforms for the filter gradient of forward F(m, r)."""
+    return cook_toom(r, m)
+
+
+@functools.lru_cache(maxsize=None)
+def grad_transform_arrays(m: int, r: int, dtype_name: str = "float32"):
+    """(AT_g, G_g, BT_g) for F(r, m), cached per (forward m, r, dtype).
+
+    Shapes: AT_g (r, alpha) -- inverse onto the r x r filter taps;
+    G_g (alpha, m) -- the gy-side transform; BT_g (alpha, alpha) -- the
+    x-side transform, identical to the forward B^T (shared points).
+    """
+    return grad_cook_toom(m, r).as_float(np.dtype(dtype_name))
+
+
 def arithmetic_reduction_1d(m: int, r: int) -> float:
     """Multiplication-count reduction of F(m, r) vs direct: m*r/(m+r-1)."""
     return m * r / (m + r - 1)

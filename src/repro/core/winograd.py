@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import tiles as tiling
-from .transforms import transform_arrays
+from .transforms import grad_transform_arrays, transform_arrays
 
 
 def _consts(m: int, r: int, dtype=jnp.float32):
@@ -35,6 +35,16 @@ def _consts(m: int, r: int, dtype=jnp.float32):
         jnp.asarray(AT, dtype=dtype),
         jnp.asarray(G, dtype=dtype),
         jnp.asarray(BT, dtype=dtype),
+    )
+
+
+def _grad_consts(m: int, r: int, dtype=jnp.float32):
+    """F(r, m) matrices for the filter gradient of forward F(m, r)."""
+    ATg, Gg, BTg = grad_transform_arrays(m, r, "float32")
+    return (
+        jnp.asarray(ATg, dtype=dtype),  # (r, alpha)
+        jnp.asarray(Gg, dtype=dtype),   # (alpha, m)
+        jnp.asarray(BTg, dtype=dtype),  # (alpha, alpha) == forward B^T
     )
 
 
@@ -81,6 +91,77 @@ def output_transform(O_hat: jax.Array, m: int, r: int) -> jax.Array:
     a = m + r - 1
     o = O_hat.reshape(a, a, *O_hat.shape[1:])  # (x, y, T, K)
     return jnp.einsum("ix,xytk,jy->tijk", AT, o, AT)
+
+
+# ----------------------- filter-gradient pipeline -----------------------
+#
+# The exact Winograd filter gradient (DESIGN.md SS8): each forward tile
+# contributes the valid correlation of its (alpha, alpha) input tile with
+# its (m, m) output-gradient tile, producing an (r, r) partial gradient --
+# the minimal algorithm F(r, m), whose transforms share the forward's
+# evaluation points (same alpha).  The x-side transform is therefore the
+# SAME B^T as the forward (``input_transform`` is reused verbatim), and the
+# tuple-wise products summed over tiles and batch form an L-batched GEMM
+# with the contraction on T:
+#
+#     dU(L, C, K) = X~(L, C, T) x Gy(L, T, K)     (X~ = V transposed)
+#
+# -- the dual of the forward GEMM, running on the identical batched-GEMM
+# core (kernels/wino_gemm, parallel/executor).
+
+
+def grad_output_transform(gy_tiles: jax.Array, m: int, r: int) -> jax.Array:
+    """(T, m, m, K) -> Gy (L, T, K): the gy-side transform G' gy G'^T.
+
+    G' is the (alpha, m) filter transform of F(r, m): the output gradient
+    plays the role of the filter in the gradient convolution.
+    """
+    _, Gg, _ = _grad_consts(m, r, gy_tiles.dtype)
+    g = jnp.einsum("xi,tijk,yj->xytk", Gg, gy_tiles, Gg)
+    a = Gg.shape[0]
+    return g.reshape(a * a, *g.shape[2:])  # (L, T, K)
+
+
+def grad_gemm(V: jax.Array, Gy: jax.Array) -> jax.Array:
+    """dU[l] = V[l]^T @ Gy[l] -- the gradient GEMM, contraction over T."""
+    return jnp.einsum("ltc,ltk->lck", V, Gy)
+
+
+def filter_grad_inverse(dU: jax.Array, m: int, r: int) -> jax.Array:
+    """dU (L, C, K) -> dw (r, r, C, K): A'^T dU A' onto the filter taps."""
+    ATg, _, _ = _grad_consts(m, r, dU.dtype)
+    a = m + r - 1
+    du = dU.reshape(a, a, *dU.shape[1:])  # (x, y, C, K)
+    return jnp.einsum("ux,xyck,vy->uvck", ATg, du, ATg)
+
+
+def winograd_filter_grad_reference(
+    x: jax.Array,
+    gy: jax.Array,
+    *,
+    r: int,
+    m: int = 4,
+    pad: int = 0,
+    compute_dtype=jnp.float32,
+) -> jax.Array:
+    """Exact filter gradient dL/dw of ``winograd_conv2d_reference`` via the
+    F(r, m) pipeline -- the jnp oracle for the Pallas/sharded dw paths.
+
+    x (N, H, W, C), gy (N, P, Q, K) -> dw (r, r, C, K), matching the VJP of
+    ``jax.lax.conv_general_dilated`` w.r.t. the HWIO filter.
+    """
+    in_dtype = x.dtype
+    x = x.astype(compute_dtype)
+    gy = gy.astype(compute_dtype)
+    N, H, W, C = x.shape
+    xp, tH, tW, P, Q = tiling.pad_for_tiles(x, m, r, pad)
+    assert gy.shape[1] == P and gy.shape[2] == Q, (gy.shape, P, Q)
+    d = tiling.flatten_tiles(tiling.extract_tiles(xp, m, r, tH, tW))
+    V = input_transform(d, m, r)                        # (L, T, C): B^T shared
+    gy_t = tiling.extract_output_tiles(gy, m, tH, tW)   # (T, m, m, K)
+    Gy = grad_output_transform(gy_t, m, r)              # (L, T, K)
+    dU = grad_gemm(V, Gy)                               # (L, C, K)
+    return filter_grad_inverse(dU, m, r).astype(in_dtype)
 
 
 # --------------------------- full convolution ---------------------------

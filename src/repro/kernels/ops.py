@@ -33,6 +33,7 @@ from repro.core.blocking import PIPELINES, BlockConfig, round_up
 
 from . import common
 from .filter_transform import filter_transform
+from .grad_transform import grad_output_transform
 from .input_transform import input_transform
 from .output_transform import output_transform
 from .wino_fused import wino_fused
@@ -190,14 +191,162 @@ def conv2d_sharded(
     return tiling.assemble_output(y, N, tH, tW, P, Q).astype(in_dtype)
 
 
+# ------------------- differentiable sharded pipeline -------------------
+#
+# The custom VJP that makes ``conv2d(..., mesh=...)`` trainable end to end
+# WITHOUT differentiating through the shard_map: both backward GEMMs are
+# explicit ``execute_gemm`` calls under the backward-aware PartitionSpecs
+# of ``parallel.executor.grad_assignments`` -- every tensor keeps its
+# forward placement, only the GEMM roles permute (the "model"-mode psum
+# changes axis in the gradient; DESIGN.md SS8 table).
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def conv2d_sharded_ad(x: jax.Array, w: jax.Array, m: int, pad: int,
+                      mesh, mode: str = "data") -> jax.Array:
+    """Differentiable ``conv2d_sharded``: same forward, exact Winograd VJP
+    with the dx and dw GEMMs sharded under ``grad_assignments(mode)``."""
+    return conv2d_sharded(x, w, m=m, pad=pad, mesh=mesh, mode=mode)
+
+
+def _sharded_fwd(x, w, m, pad, mesh, mode):
+    return conv2d_sharded_ad(x, w, m, pad, mesh, mode), (x, w)
+
+
+def _sharded_bwd(m, pad, mesh, mode, res, gy):
+    from repro.core import winograd as wg
+    from repro.parallel.executor import execute_gemm, grad_assignments
+
+    x, w = res
+    r = w.shape[0]
+    dx_asn, dw_asn = grad_assignments(mode)
+    gy32 = gy.astype(jnp.float32)
+
+    # ---- dx: rotated-filter Winograd conv, GEMM contracting K ----
+    dx = _dx_via_rotated_conv(
+        lambda g, wr, s: conv2d_sharded(g, wr, m=m, pad=s, mesh=mesh,
+                                        mode=dx_asn),
+        gy32, w, x.shape[1], x.shape[2], pad)
+
+    # ---- dw: F(r, m) filter-gradient pipeline, GEMM contracting T ----
+    x32 = x.astype(jnp.float32)
+    xp, tH, tW, P, Q = tiling.pad_for_tiles(x32, m, r, pad)
+    d = tiling.flatten_tiles(tiling.extract_tiles(xp, m, r, tH, tW))
+    V = wg.input_transform(d, m, r)                       # (L, T, C)
+    gy_t = tiling.extract_output_tiles(gy32, m, tH, tW)   # (T, m, m, K)
+    Gy = wg.grad_output_transform(gy_t, m, r)             # (L, T, K)
+    dU = execute_gemm(jnp.transpose(V, (0, 2, 1)), Gy,
+                      mode=dw_asn, mesh=mesh)             # (L, C, K)
+    dw = wg.filter_grad_inverse(dU, m, r)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+conv2d_sharded_ad.defvjp(_sharded_fwd, _sharded_bwd)
+
+
+# ----------------------- exact filter gradient -----------------------
+#
+# The F(r, m) filter-gradient pipeline on the Pallas kernel core
+# (DESIGN.md SS8): the x-side transform is the forward input transform
+# (B^T is shared between F(m, r) and F(r, m) -- same evaluation points),
+# the gy-side transform runs the F(r, m) filter-transform kernel, and the
+# contraction over tiles is the SAME L-batched GEMM kernel as the forward
+# with the roles permuted:
+#
+#     dU(L, C, K) = X~(L, C, T) x Gy(L, T, K)      (wino_gemm, rows=C,
+#                                                    contraction=T, cols=K)
+#
+# The inverse transform onto the r x r tap grid (A'^T dU A') contracts a
+# tensor that is K*C small -- it stays a jnp einsum, like the epilogue
+# scale/shift of the serving stack.
+
+
+@functools.partial(jax.jit, static_argnames=("r", "m", "pad", "interpret"))
+def conv2d_filter_grad(
+    x: jax.Array,
+    gy: jax.Array,
+    *,
+    r: int,
+    m: int = 4,
+    pad: int = 0,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Exact Winograd filter gradient: x (N,H,W,C), gy (N,P,Q,K) -> (r,r,C,K).
+
+    Matches the VJP of the framework convolution w.r.t. the HWIO filter;
+    the Winograd-domain tensors are held in f32 (same rounding-amplification
+    argument as the forward pipelines).  Returns f32; callers cast.
+    """
+    from repro.core import winograd as wg
+    from repro.core.plan import grad_kernel_blocks  # deferred: import acyclic
+
+    x = x.astype(jnp.float32)
+    gy = gy.astype(jnp.float32)
+    a = m + r - 1
+    N, H, W, C = x.shape
+    K = gy.shape[-1]
+
+    # ---- tiling: overlapping x tiles + non-overlapping gy tiles ----
+    xp, tH, tW, P, Q = tiling.pad_for_tiles(x, m, r, pad)
+    d = tiling.flatten_tiles(tiling.extract_tiles(xp, m, r, tH, tW))
+    T = d.shape[0]
+    d = d.reshape(T, a * a, C)
+    gy_t = tiling.extract_output_tiles(gy, m, tH, tW)    # (T, m, m, K)
+    gy_t = gy_t.reshape(T, m * m, K)
+
+    # ---- blocking (plan layer): rows=C, contraction=T, cols=K ----
+    cfg = grad_kernel_blocks(C, T, K, m, r, elt_bytes=4)
+    Cp = round_up(C, cfg.block_t)
+    Tp = round_up(T, cfg.block_c)
+    Kp = round_up(K, cfg.block_k)
+    d = common.pad_axis_to(common.pad_axis_to(d, 0, Tp), 2, Cp)
+    gy_t = common.pad_axis_to(common.pad_axis_to(gy_t, 0, Tp), 2, Kp)
+
+    # ---- transforms (Pallas): X~ = B^T d B, Gy = G' gy G'^T ----
+    V = input_transform(d, m=m, r=r, block_t=cfg.block_c, block_c=cfg.block_t,
+                        interpret=interpret)             # (L, Tp, Cp)
+    Gy = grad_output_transform(gy_t, m=m, r=r, block_t=cfg.block_c,
+                               block_k=cfg.block_k, interpret=interpret)
+
+    # ---- the gradient GEMM on the forward GEMM kernel ----
+    dU = wino_gemm(jnp.transpose(V, (0, 2, 1)), Gy,
+                   block_t=cfg.block_t, block_k=cfg.block_k,
+                   block_c=cfg.block_c, interpret=interpret)  # (L, Cp, Kp)
+
+    # ---- inverse onto the r x r filter taps ----
+    return wg.filter_grad_inverse(dU[:, :C, :K], m, r)
+
+
 # --------------------- differentiable wrapper ---------------------
 #
-# The transforms are linear, so the exact backward pass is itself a Winograd
-# pipeline: dL/dx is a full-correlation with the channel-transposed,
-# 180deg-rotated filter -- which we run through the same Pallas pipeline,
-# keeping the heavy data-gradient on the optimized kernels.  dL/dw uses the
-# canonical XLA filter-gradient convolution (a Winograd filter-side gradient
-# would need F(r, m) transforms; modeled in DESIGN.md SS8 as future work).
+# The transforms are linear, so the exact backward pass is two more
+# Winograd pipelines: dL/dx is a full-correlation with the
+# channel-transposed, 180deg-rotated filter -- run through the same Pallas
+# forward pipeline -- and dL/dw is the F(r, m) filter-gradient pipeline
+# above.  Both of the training step's heavy backward GEMMs therefore run
+# on the optimized kernels (DESIGN.md SS8).
+
+
+def _dx_via_rotated_conv(conv_fn, gy: jax.Array, w: jax.Array,
+                         H: int, W: int, pad: int) -> jax.Array:
+    """dL/dx as a full correlation of gy with the rotated, C/K-swapped
+    filter, through ``conv_fn(gy, w_rot, pad=...)``.
+
+    The effective backward padding r - 1 - pad goes negative once
+    pad >= r; padding is non-negative in the kernel contract, so compute
+    with the clamped pad and crop the surplus border (exact: the cropped
+    rows are the out-of-range taps a negative pad would have skipped).
+    The single definition for both the Pallas and the sharded backward.
+    """
+    r = w.shape[0]
+    w_rot = jnp.transpose(w[::-1, ::-1, :, :], (0, 1, 3, 2))  # (r, r, K, C)
+    pad_b = r - 1 - pad
+    s = max(pad_b, 0)
+    dx = conv_fn(gy, w_rot, s)
+    crop = s - pad_b
+    if crop:
+        dx = dx[:, crop:crop + H, crop:crop + W, :]
+    return dx
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
@@ -217,18 +366,12 @@ def _bwd(m, pad, pipeline, res, gy):
     r = w.shape[0]
     if isinstance(pipeline, bool):
         pipeline = "fused" if pipeline else "nonfused"
-    # dx: full correlation of gy with rotated, C/K-swapped filter
-    w_rot = jnp.transpose(w[::-1, ::-1, :, :], (0, 1, 3, 2))  # (r, r, K, C)
-    dx = conv2d_pallas(gy, w_rot, m=m, pad=r - 1 - pad, pipeline=pipeline)
-    # dw: filter gradient via XLA's transposed convolution
-    _, vjp = jax.vjp(
-        lambda w_: jax.lax.conv_general_dilated(
-            x, w_, (1, 1), ((pad, pad), (pad, pad)),
-            dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        ),
-        w,
-    )
-    (dw,) = vjp(gy)
+    # dx: rotated-filter full correlation through the same Pallas pipeline
+    dx = _dx_via_rotated_conv(
+        lambda g, wr, s: conv2d_pallas(g, wr, m=m, pad=s, pipeline=pipeline),
+        gy, w, x.shape[1], x.shape[2], pad)
+    # dw: exact F(r, m) Winograd filter gradient on the Pallas GEMM core
+    dw = conv2d_filter_grad(x, gy, r=r, m=m, pad=pad).astype(w.dtype)
     return dx, dw
 
 

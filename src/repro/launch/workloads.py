@@ -212,6 +212,83 @@ def build_workload(cfg: ModelConfig, shape: str, mesh,
     )
 
 
+# --------------------------- CNN training (SS8) ---------------------------
+#
+# The CNN counterpart of the LM workloads above, and the workload that
+# makes the Winograd backward pass load-bearing: a full train step over a
+# ``models.cnn`` network on a mesh runs the forward pipelines AND the
+# F(r, m) filter-gradient / rotated-filter dx pipelines under shard_map
+# (``train.cnn.build_cnn_train_step``).  Typical entry::
+#
+#     wl = build_cnn_workload("vgg16", mesh=host_mesh(8))
+#     state, metrics = run_cnn_workload(wl, steps=8)
+
+
+@dataclasses.dataclass
+class CNNWorkload:
+    kind: str                 # "cnn_train"
+    arch: str
+    step: Callable            # (state, batch) -> (state, metrics)
+    state: Any                # initialized TrainState
+    pipeline: Any             # .batch_at(step) -> {"images", "labels"}
+    mesh: Any = None
+
+
+def build_cnn_workload(
+    arch: str = "vgg16",
+    *,
+    mesh=None,
+    batch: int = 8,
+    hw: int = 32,
+    n_classes: int = 10,
+    width_mult: float = 0.125,
+    algorithm: str = "auto",
+    lr: float = 3e-3,
+    seed: int = 0,
+) -> CNNWorkload:
+    """Assemble a trainable CNN workload on the Winograd conv stack.
+
+    ``mesh`` (e.g. ``launch.mesh.host_mesh(8)``) shards every eligible
+    conv's forward and backward GEMMs; the image batch is zero-padded to
+    the mesh's "data" multiple by the caller if ragged (the serving
+    engine's convention).  The reduced defaults (width_mult, 32px) keep a
+    host-mesh smoke run in seconds; production scales the same entry.
+    """
+    from repro.data import SyntheticImages
+    from repro.models.cnn import CNN_BUILDERS
+    from repro.optim import adamw, warmup_cosine
+    from repro.train import build_cnn_train_step, init_cnn_state
+
+    init_fn, forward = CNN_BUILDERS[arch]
+    opt = adamw(warmup_cosine(lr, 5, 1000), weight_decay=0.01)
+    state = init_cnn_state(init_fn, opt, jax.random.PRNGKey(seed),
+                           width_mult=width_mult, n_classes=n_classes)
+    step = build_cnn_train_step(forward, opt, algorithm=algorithm, mesh=mesh)
+    pipe = SyntheticImages(hw=hw, channels=3, n_classes=n_classes,
+                           global_batch=batch, seed=seed)
+    return CNNWorkload(kind="cnn_train", arch=arch, step=step, state=state,
+                       pipeline=pipe, mesh=mesh)
+
+
+def run_cnn_workload(wl: CNNWorkload, *, steps: int = 8,
+                     donate: bool = True) -> tuple[Any, dict]:
+    """Run ``steps`` jitted train steps; returns (state, last metrics +
+    loss_history).  The jit cache entry keeps its sharded form, so
+    steady-state steps pay no re-partitioning cost.  ``wl.state`` is
+    rebound to the final state: with donation the input buffers are
+    consumed, so the workload must never keep pointing at them (repeat
+    runs continue from where the last one stopped)."""
+    fn = jax.jit(wl.step, donate_argnums=(0,) if donate else ())
+    state, metrics, history = wl.state, {}, []
+    start = int(state.step)
+    for i in range(start, start + steps):
+        state, metrics = fn(state, wl.pipeline.batch_at(i))
+        history.append(float(metrics["loss"]))
+    wl.state = state
+    return state, {"loss_history": history,
+                   **{k: float(v) for k, v in metrics.items()}}
+
+
 def lower_workload(wl: Workload, mesh=None):
     """jit + lower under the mesh context; returns the Lowered object.
 

@@ -29,6 +29,14 @@ before the shard_map and crop after -- zero rows/columns are exact
 pass-throughs of the bilinear algorithm, and zero C-slices contribute
 nothing to the psum.
 
+The three modes are instances of a general ``GemmAssignment`` (row /
+contraction / column axis placement); the backward pass executes two more
+GEMMs per conv -- dx contracting K, dw contracting T (the F(r, m) filter
+gradient) -- whose assignments are the forward mode's with the roles
+permuted (``grad_assignments``, DESIGN.md SS8): every tensor keeps its
+forward placement, and the psum moves to whichever role holds the
+contracted axis.
+
 ``use_mesh`` installs an ambient (mesh, mode) so call sites that cannot
 thread a mesh argument (the CNN forwards under ``serve.ConvServeEngine``)
 still route through the executor: ``core.conv.conv2d`` checks
@@ -46,6 +54,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +68,56 @@ from .strategy import MODES
 DATA_AXIS = "data"
 MODEL_AXIS = "model"
 
+AxisSpec = "str | tuple[str, ...] | None"
+
+
+class GemmAssignment(NamedTuple):
+    """Mesh-axis placement of the three batched-GEMM roles.
+
+    ``execute_gemm`` computes out(L, row, col) = V(L, row, red) x
+    U(L, red, col); each field names the mesh axis (or axis tuple) that
+    role is sharded over, or None for unsharded.  A sharded ``red``
+    (contraction) axis means every rank computes a partial product and the
+    partials are psum-ed over it.  The three canonical forward modes are
+    assignments too (``MODE_ASSIGNMENTS``); the backward GEMMs of the
+    gradient pipelines permute them (``grad_assignments`` -- the
+    "backward-aware PartitionSpecs" of DESIGN.md SS8).
+    """
+
+    row: AxisSpec = None
+    red: AxisSpec = None
+    col: AxisSpec = None
+
+
+#: forward-mode placement of (T, C, K) -- T is the GEMM row, C the
+#: contraction, K the column (DESIGN.md SS6 table).
+MODE_ASSIGNMENTS: dict[str, GemmAssignment] = {
+    "data": GemmAssignment(row=(DATA_AXIS, MODEL_AXIS), red=None, col=None),
+    "2d": GemmAssignment(row=DATA_AXIS, red=None, col=MODEL_AXIS),
+    "model": GemmAssignment(row=None, red=DATA_AXIS, col=MODEL_AXIS),
+}
+
+
+def grad_assignments(mode: str) -> tuple[GemmAssignment, GemmAssignment]:
+    """(dx, dw) GEMM assignments dual to a forward mode.
+
+    Every tensor keeps its forward placement in the backward pass; only
+    the GEMM roles permute:
+
+      dx:  dV(L, T, C) = dO(L, T, K) x U^T(L, K, C)   (contraction on K)
+      dw:  dU(L, C, K) = V^T(L, C, T) x Gy(L, T, K)   (contraction on T)
+
+    so e.g. forward "2d" (T over data x K over model) yields a dw GEMM
+    that is exactly the forward "model" spec-triple (contract over "data",
+    psum the partials) and a dx GEMM that is its transpose (contract over
+    "model") -- the "model"-mode psum changes axis in the gradient.
+    """
+    fwd = MODE_ASSIGNMENTS[mode]
+    t_ax, c_ax, k_ax = fwd.row, fwd.red, fwd.col
+    dx = GemmAssignment(row=t_ax, red=k_ax, col=c_ax)
+    dw = GemmAssignment(row=c_ax, red=t_ax, col=k_ax)
+    return dx, dw
+
 
 def _pad_axis(x: jax.Array, axis: int, size: int) -> jax.Array:
     # same zero-pad as kernels/common.pad_axis_to, local to keep the
@@ -71,8 +130,8 @@ def _pad_axis(x: jax.Array, axis: int, size: int) -> jax.Array:
     return jnp.pad(x, cfg)
 
 
-def gemm_pspecs(mode: str) -> tuple[P, P, P, str | None]:
-    """(V_spec, U_spec, out_spec, psum_axis) for one parallel mode."""
+def gemm_pspecs(mode: "str | GemmAssignment") -> tuple[P, P, P, AxisSpec]:
+    """(V_spec, U_spec, out_spec, psum_axis) for a mode or assignment."""
     if mode == "data":
         t = (DATA_AXIS, MODEL_AXIS)
         return P(None, t, None), P(), P(None, t, None), None
@@ -82,16 +141,34 @@ def gemm_pspecs(mode: str) -> tuple[P, P, P, str | None]:
     if mode == "model":
         return (P(None, None, DATA_AXIS), P(None, DATA_AXIS, MODEL_AXIS),
                 P(None, None, MODEL_AXIS), DATA_AXIS)
-    raise ValueError(f"unknown parallel mode {mode!r}; expected one of {MODES}")
+    if isinstance(mode, GemmAssignment):
+        return (P(None, mode.row, mode.red), P(None, mode.red, mode.col),
+                P(None, mode.row, mode.col), mode.red)
+    raise ValueError(f"unknown parallel mode {mode!r}; expected one of "
+                     f"{MODES} or a GemmAssignment")
 
 
-def _padded_dims(mode: str, T: int, C: int, K: int, dp: int, tp: int):
+def _axis_factor(spec: AxisSpec, mesh) -> int:
+    """Number of shards a spec entry splits its array axis into."""
+    if spec is None:
+        return 1
+    if isinstance(spec, str):
+        return mesh.shape[spec]
+    n = 1
+    for a in spec:
+        n *= mesh.shape[a]
+    return n
+
+
+def _padded_dims(mode, T: int, C: int, K: int, mesh):
     """Global extents padded so every sharded axis divides its mesh axes."""
-    if mode == "data":
-        return _round_up(T, dp * tp), C, K
-    if mode == "2d":
-        return _round_up(T, dp), C, _round_up(K, tp)
-    return T, _round_up(C, dp), _round_up(K, tp)   # "model"
+    if isinstance(mode, str):
+        mode = MODE_ASSIGNMENTS[mode]
+    return (
+        _round_up(T, _axis_factor(mode.row, mesh)),
+        _round_up(C, _axis_factor(mode.red, mesh)),
+        _round_up(K, _axis_factor(mode.col, mesh)),
+    )
 
 
 def _local_matmul(v, u):
@@ -109,14 +186,16 @@ def execute_gemm(
 ) -> jax.Array:
     """V (L,T,C) x U (L,C,K) -> O^ (L,T,K) in f32, sharded per ``mode``.
 
+    ``mode`` is a canonical forward-mode name or a ``GemmAssignment`` (the
+    backward GEMMs of the gradient pipelines pass the latter; the array
+    roles are then (L, row, red) x (L, red, col) -> (L, row, col)).
     Jit-traceable (the pad/crop and the shard_map are all traced ops), so
     it composes with the serving engine's per-signature jit cache.
     """
     L, T, C = V.shape
     L2, C2, K = U.shape
     assert L == L2 and C == C2, (V.shape, U.shape)
-    dp, tp = mesh.shape[DATA_AXIS], mesh.shape[MODEL_AXIS]
-    Tp, Cp, Kp = _padded_dims(mode, T, C, K, dp, tp)
+    Tp, Cp, Kp = _padded_dims(mode, T, C, K, mesh)
     V = _pad_axis(_pad_axis(V, 1, Tp), 2, Cp)
     U = _pad_axis(_pad_axis(U, 1, Cp), 2, Kp)
 

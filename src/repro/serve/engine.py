@@ -58,9 +58,12 @@ class ServeEngine:
         cache = self.api.init_cache(B, self.max_len)
         batch = {"tokens": prompts, **(extras or {})}
         logits, cache = self._prefill(self.params, batch, cache)
-        key = jax.random.PRNGKey(seed)
+        # split BEFORE the first sample: the root key must never be both
+        # consumed by a sample and split for the chain (key reuse would
+        # correlate the first token with the second draw)
+        key, sub = jax.random.split(jax.random.PRNGKey(seed))
         out = []
-        tok = self._sample(logits, key, temperature)
+        tok = self._sample(logits, sub, temperature)
         for i in range(max_new_tokens):
             out.append(tok)
             if i == max_new_tokens - 1:
@@ -102,12 +105,16 @@ class ConvServeEngine:
     ``models.cnn`` forwards (or a compatible callable).
 
     ``mesh`` scales the engine out: the image batch is sharded over the
-    mesh's "data" axis (degrading to replicated when the batch does not
-    divide it) and -- via ``repro.parallel.executor.use_mesh`` at trace
-    time -- every Winograd-eligible conv inside ``forward`` executes its
-    Winograd-domain GEMM under shard_map with the plan's per-layer
-    parallel mode.  The jit cache entry keeps its sharded form, so
-    steady-state requests pay neither selection nor re-partitioning cost.
+    mesh's "data" axis -- a ragged batch is zero-padded up to the axis
+    multiple and the logits cropped, the same edge treatment as the
+    executor's ragged T/C/K extents (zero images cost dead flops, never
+    replicated compute) -- and, via ``repro.parallel.executor.use_mesh``
+    at trace time, every Winograd-eligible conv inside ``forward``
+    executes its Winograd-domain GEMM under shard_map with the plan's
+    per-layer parallel mode.  The jit cache entry keeps its sharded form
+    (keyed on the PADDED shape, so ragged batches share the aligned
+    entry), and steady-state requests pay neither selection nor
+    re-partitioning cost.
     """
 
     def __init__(self, forward, params: Any, *, algorithm: str = "auto",
@@ -119,14 +126,20 @@ class ConvServeEngine:
         self._compiled: dict = {}
 
     def _shard_batch(self, images: jax.Array) -> jax.Array:
+        """Zero-pad the batch to the "data"-axis multiple and lay it out."""
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         dp = self.mesh.shape.get("data", 1)
-        spec = P("data") if images.shape[0] % dp == 0 else P()
-        return jax.device_put(images, NamedSharding(self.mesh, spec))
+        pad = -images.shape[0] % dp
+        if pad:
+            images = jnp.pad(images, ((0, pad),) + ((0, 0),) * (images.ndim - 1))
+        return jax.device_put(images, NamedSharding(self.mesh, P("data")))
 
     def infer(self, images: jax.Array) -> jax.Array:
         """(B, H, W, C) -> logits; compiles once per input signature."""
+        B = images.shape[0]
+        if self.mesh is not None:
+            images = self._shard_batch(images)
         key = (tuple(images.shape), str(images.dtype))
         fn = self._compiled.get(key)
         if fn is None:
@@ -138,7 +151,8 @@ class ConvServeEngine:
         from repro.parallel.executor import use_mesh
 
         with use_mesh(self.mesh):
-            return fn(self.params, self._shard_batch(images))
+            out = fn(self.params, images)
+        return out[:B] if out.shape[0] != B else out
 
     @property
     def compiled_signatures(self) -> int:

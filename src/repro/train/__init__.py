@@ -1,2 +1,3 @@
+from .cnn import build_cnn_train_step, cnn_loss, init_cnn_state  # noqa: F401
 from .step import TrainState, build_train_step, init_state  # noqa: F401
 from .trainer import Trainer, TrainerConfig  # noqa: F401

@@ -1,0 +1,99 @@
+"""CNN training on the Winograd conv stack -- forward AND backward sharded.
+
+This is the training-side counterpart of ``serve.ConvServeEngine``
+(DESIGN.md SS7/SS8): the Table-1 networks (``repro.models.cnn``) train
+with every stride-1 3x3 convolution routed through ``repro.core.conv2d``,
+so a training step runs
+
+  * the forward Winograd pipelines (plan-selected algorithm/m/blocking),
+  * the exact F(r, m) filter-gradient pipeline for dL/dw, and
+  * the rotated-filter Winograd pipeline for dL/dx
+
+on the same optimized kernels.  With ``mesh=`` the step traces inside
+``parallel.executor.use_mesh``, so all three GEMMs per conv execute under
+shard_map -- the forward on the plan's parallel mode, the two backward
+GEMMs on the backward-aware PartitionSpecs dual to it
+(``executor.grad_assignments``).  This is what converts the reproduction
+from an inference artifact into a trainable system: the ROADMAP's training
+workload runs its heaviest GEMMs on-plan in both directions.
+
+The optimizer/TrainState machinery is shared with the LM stack
+(``repro.train.step`` / ``repro.optim``) -- CNN params are a pytree like
+any other.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import clip_by_global_norm
+from repro.optim.adamw import Optimizer
+
+from .step import TrainState
+
+
+def cnn_loss(forward: Callable, params: Any, batch: dict, *,
+             algorithm: str = "auto") -> tuple[jax.Array, dict]:
+    """Softmax cross-entropy + accuracy for an image-classification batch."""
+    logits = forward(params, batch["images"], algorithm=algorithm)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, {"accuracy": acc}
+
+
+def init_cnn_state(init_fn: Callable, opt: Optimizer, key, **init_kw) -> TrainState:
+    """TrainState over a ``models.cnn`` init (vgg16_init / resnet50_init / ...)."""
+    params = init_fn(key, **init_kw)
+    return TrainState(step=jnp.int32(0), params=params,
+                      opt_state=opt.init(params))
+
+
+def build_cnn_train_step(
+    forward: Callable,
+    opt: Optimizer,
+    *,
+    algorithm: str = "auto",
+    mesh=None,
+    clip_norm: float | None = 1.0,
+):
+    """(state, batch) -> (state, metrics), jit-compatible with donated state.
+
+    ``mesh`` activates the sharded conv path: the returned step enters
+    ``use_mesh(mesh)`` before calling into the model, so at trace time
+    every Winograd-eligible conv dispatches ``conv2d_sharded_ad`` -- the
+    custom-VJP sharded pipeline -- and the jitted step keeps its sharded
+    form (forward and backward) forever.
+    """
+
+    def loss_fn(params, batch):
+        return cnn_loss(forward, params, batch, algorithm=algorithm)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: dict):
+        (loss, metrics), grads = grad_fn(state.params, batch)
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            metrics = {**metrics, "grad_norm": gnorm}
+        new_params, new_opt = opt.update(grads, state.opt_state, state.params)
+        new_state = TrainState(step=state.step + 1, params=new_params,
+                               opt_state=new_opt)
+        return new_state, {"loss": loss, **metrics}
+
+    if mesh is None:
+        return train_step
+
+    from repro.parallel.executor import use_mesh
+
+    def train_step_sharded(state: TrainState, batch: dict):
+        # read at TRACE time: a jit cache entry compiled in this scope
+        # keeps the sharded forward+backward form
+        with use_mesh(mesh):
+            return train_step(state, batch)
+
+    return train_step_sharded

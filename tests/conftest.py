@@ -23,13 +23,19 @@ if _n_dev and "xla_force_host_platform_device_count" not in os.environ.get(
 
 # ------------------------- multi-device fixture -------------------------
 #
-# The parallel-execution tests need 8 devices.  In a run launched with
-# REPRO_HOST_DEVICES=8 (the fast verify path) the fixture hands out the
-# mesh directly.  In a plain `pytest -q` run the backend is already locked
-# to the host's real device count by the time the fixture fires, so it
-# RE-EXECS: one subprocess re-runs the requesting test module under the
-# flag, and the in-process tests report skipped with the subprocess's
-# verdict enforced.  Session-scoped, so the subprocess runs at most once.
+# The parallel-execution and sharded-gradient tests need 8 devices.  In a
+# run launched with REPRO_HOST_DEVICES=8 (the fast verify path) the
+# fixture hands out the mesh directly.  In a plain `pytest -q` run the
+# backend is already locked to the host's real device count by the time
+# the fixture fires, so it RE-EXECS: one subprocess re-runs every module
+# that uses the fixture under the flag, and the in-process tests report
+# skipped with the subprocess's verdict enforced.  Session-scoped, so the
+# subprocess runs at most once.
+
+#: every test module that requests ``host_mesh8`` -- the re-exec child
+#: runs them all in one invocation.
+HOST_MESH_MODULES = ("test_parallel_exec.py", "test_conv_grad.py")
+
 
 @pytest.fixture(scope="session")
 def host_mesh8():
@@ -43,7 +49,8 @@ def host_mesh8():
         pytest.fail("re-exec still lacks 8 devices -- XLA_FLAGS device "
                     "count was not applied (flags: %r)"
                     % os.environ.get("XLA_FLAGS", ""))
-    module = os.path.join(os.path.dirname(__file__), "test_parallel_exec.py")
+    modules = [os.path.join(os.path.dirname(__file__), mod)
+               for mod in HOST_MESH_MODULES]
     # strip any inherited device-count flag: the child conftest only adds
     # the flag when absent, so a stale count (e.g. a parent run pinned to
     # 4 devices) would otherwise survive and the child would no-op.
@@ -53,8 +60,8 @@ def host_mesh8():
     env = dict(os.environ, XLA_FLAGS=flags, REPRO_HOST_DEVICES="8",
                REPRO_PARALLEL_REEXEC="1")
     out = subprocess.run(
-        [sys.executable, "-m", "pytest", "-q", module],
-        env=env, capture_output=True, text=True, timeout=1800,
+        [sys.executable, "-m", "pytest", "-q", *modules],
+        env=env, capture_output=True, text=True, timeout=3600,
         cwd=os.path.join(os.path.dirname(__file__), ".."))
     assert out.returncode == 0, (
         "re-exec with 8 simulated devices FAILED:\n" + out.stdout[-4000:]

@@ -55,7 +55,7 @@ def test_conv2d_property(n, h, w_, c, k, m, pad):
 
 @pytest.mark.parametrize("m", [2, pytest.param(6, marks=pytest.mark.slow)])
 def test_fused_pallas_gradients(m):
-    """Custom VJP (transpose-Winograd dx + XLA dw) vs autodiff of direct."""
+    """Custom VJP (rotated-conv dx + F(r, m) dw) vs autodiff of direct."""
     x, w = _data(1, 12, 12, 4, 8, 3)
 
     def loss_pallas(x, w):

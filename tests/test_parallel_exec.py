@@ -120,6 +120,28 @@ def test_serve_engine_shards_batch(host_mesh8):
     assert eng.compiled_signatures == 1
 
 
+def test_serve_engine_ragged_batch(host_mesh8):
+    """Regression (PR3 satellite): a batch that does not divide the "data"
+    axis used to silently replicate; now it zero-pads to the mesh multiple
+    and crops the logits (the executor's ragged-extent convention)."""
+    from repro.models.cnn import vgg16_forward, vgg16_init
+    from repro.serve import ConvServeEngine
+
+    params = vgg16_init(jax.random.PRNGKey(1), width_mult=0.125, n_classes=10)
+    imgs = jax.random.normal(jax.random.PRNGKey(2), (5, 32, 32, 3),
+                             jnp.float32)       # 5 % dp(4) != 0
+    ref = ConvServeEngine(vgg16_forward, params).infer(imgs)
+    eng = ConvServeEngine(vgg16_forward, params, mesh=host_mesh8)
+    got = eng.infer(imgs)
+    assert got.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-3, rtol=2e-3)
+    sharded = eng._shard_batch(imgs)
+    dp = host_mesh8.shape["data"]
+    assert sharded.shape[0] == -(-5 // dp) * dp  # padded to the multiple
+    assert sharded.sharding.spec[0] == "data"    # actually laid out, not P()
+
+
 def test_gemm_pspecs_table():
     """The mode -> PartitionSpec binding documented in DESIGN.md SS6."""
     from jax.sharding import PartitionSpec as P

@@ -104,3 +104,28 @@ def test_serve_engine_greedy_matches_forward():
     np.testing.assert_array_equal(
         np.asarray(out[:, 0]),
         np.asarray(jnp.argmax(lf[:, -1, : cfg.vocab], -1)))
+
+
+def test_serve_engine_never_reuses_rng_keys():
+    """Regression (PR3 satellite): the root PRNG key was consumed by the
+    first sample and then split for the chain -- a key must never be both
+    used and split.  Every sample key must be distinct and none of them
+    the root key itself."""
+    cfg = configs.get_smoke_config("rwkv6_1_6b")
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(api, params, max_len=48)
+    seen = []
+    orig = engine._sample
+
+    def spy(logits, key, temperature):
+        seen.append(tuple(np.asarray(key).tolist()))
+        return orig(logits, key, temperature)
+
+    engine._sample = spy
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    out = engine.generate(prompts, max_new_tokens=4, temperature=1.0, seed=5)
+    assert out.shape == (2, 4)
+    root = tuple(np.asarray(jax.random.PRNGKey(5)).tolist())
+    assert root not in seen, "root key consumed directly"
+    assert len(set(seen)) == len(seen) == 4, "a sample key was reused"

@@ -14,7 +14,8 @@ verify:
 	    tests/test_conv_golden.py tests/test_optim.py \
 	    tests/test_checkpoint_data.py
 	REPRO_HOST_DEVICES=8 $(PYTEST) -q -x tests/test_parallel_exec.py \
-	    tests/test_conv_grad.py
+	    tests/test_conv_grad.py tests/test_serve_scheduler.py \
+	    tests/test_serve_coalesce.py
 
 # Full tier-1 (slow sweeps still deselected by default addopts)
 test:
@@ -39,5 +40,8 @@ bench-smoke:
 	    run(scale=0.0625, reps=1)"
 	$(PY) -c "from benchmarks.fig_train_step import run; \
 	    run(scale=0.0625, reps=1)"
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" $(PY) -c \
+	    "from benchmarks.fig_serve_traffic import run; \
+	    run(n_requests=16, slots=4, max_new=16)"
 
 .PHONY: verify test test-all bench-traffic bench-smoke

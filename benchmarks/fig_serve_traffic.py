@@ -1,0 +1,209 @@
+"""Serve-traffic figure: continuous vs uniform batching under mixed arrivals.
+
+The paper's amortization argument at the serving layer: a fixed decode
+batch whose slots drain at different times wastes steps; a slot pool with
+per-row KV cursors (serve/scheduler.py) refills retired rows mid-stream.
+This figure runs BOTH policies on the same seeded synthetic arrival
+schedule (Poisson-gapped arrivals, uniform prompt length, mixed generation
+lengths) and reports decode-token throughput + per-request latency, with a
+self-validating exactness column: every continuous-batch token stream is
+compared against a solo ``ServeEngine.generate`` of that request --
+``exact_mismatch_tokens`` MUST be 0 (greedy decoding, row-independent
+masked decode).
+
+The CNN half measures request coalescing: N concurrent ragged requests
+served one-by-one through a mesh-sharded ``ConvServeEngine`` vs merged into
+one padded batch by ``CoalescingConvServeEngine`` on the simulated 8-device
+host mesh, with the coalesced-vs-per-request max error as its own
+self-validation column.  Like fig9, the mesh half needs the device-count
+flag installed before jax initializes and is skipped otherwise.
+
+Emits ``BENCH_serve_traffic.json`` for CI tracking (make bench-smoke).
+"""
+
+from __future__ import annotations
+
+import json
+
+MEASURE_DEVICES = 8
+
+if __name__ == "__main__":
+    # before any jax backend init (env flag; importing jax is still fine)
+    from repro.launch.mesh import request_host_devices
+
+    request_host_devices(MEASURE_DEVICES)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit
+
+JSON_PATH = "BENCH_serve_traffic.json"
+
+
+def lm_traffic_row(*, arch: str = "chatglm3_6b", n_requests: int = 24,
+                   slots: int = 4, prompt_len: int = 8, max_new: int = 24,
+                   seed: int = 0, reps: int = 3) -> dict:
+    """One row: uniform vs continuous on the same schedule + exactness.
+
+    Each policy replays the (deterministic) schedule ``reps`` times and
+    the best decode-loop time is kept -- single smoke-model decode steps
+    are sub-millisecond, so one pass is dispatch-noise-dominated.
+    """
+    from repro import configs
+    from repro.models.api import build
+    from repro.serve import (ContinuousBatchingScheduler, Request,
+                             ServeEngine, poisson_schedule,
+                             run_uniform_batches)
+
+    cfg = configs.get_smoke_config(arch)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(api, params, max_len=prompt_len + max_new)
+    reqs = poisson_schedule(n_requests, cfg.vocab, prompt_len=prompt_len,
+                            max_new=max_new, seed=seed)
+
+    # solo reference streams (exactness oracle; also warms the single-row
+    # prefill/decode traces)
+    solo = {}
+    for r in reqs:
+        out = engine.generate(jnp.asarray(r.prompt, jnp.int32)[None],
+                              max_new_tokens=r.max_new_tokens)
+        solo[r.rid] = [int(t) for t in np.asarray(out[0])]
+
+    # warm the batched traces so neither timed loop pays compile cost:
+    # uniform's (slots, S) prefill + (slots, 1) decode, and the scheduler's
+    # masked decode + vmapped sampler
+    warm = [Request(rid=-1 - j, prompt=reqs[j % len(reqs)].prompt,
+                    max_new_tokens=2) for j in range(slots)]
+    run_uniform_batches(engine, warm, slots=slots)
+    ContinuousBatchingScheduler(engine, slots=slots).run(
+        [Request(rid=-100 - j, prompt=reqs[0].prompt, max_new_tokens=2)
+         for j in range(slots)])
+
+    uni = min((run_uniform_batches(engine, reqs, slots=slots)
+               for _ in range(reps)), key=lambda u: u["decode_seconds"])
+    scheds = []
+    for _ in range(reps):
+        s = ContinuousBatchingScheduler(engine, slots=slots)
+        s.run(reqs)
+        scheds.append(s)
+    sched = min(scheds, key=lambda s: s.decode_seconds)
+    done = {c.rid: c for c in sched.finished}
+
+    def _mismatches(got, want):
+        return (sum(1 for a, b in zip(got, want) if a != b)
+                + abs(len(got) - len(want)))
+
+    mismatch = sum(_mismatches(done[r.rid].tokens, solo[r.rid]) for r in reqs)
+    uni_mismatch = sum(_mismatches(uni["streams"][r.rid], solo[r.rid])
+                       for r in reqs)
+
+    cont_lat = [done[r.rid].latency_steps for r in reqs]
+    uni_lat = [uni["latency_steps"][r.rid] for r in reqs]
+    cont_tps = sched.useful_tokens / max(sched.decode_seconds, 1e-12)
+    uni_tps = uni["useful_tokens"] / max(uni["decode_seconds"], 1e-12)
+    return {
+        "arch": cfg.name, "n_requests": n_requests, "slots": slots,
+        "prompt_len": prompt_len, "useful_tokens": sched.useful_tokens,
+        "uniform_decode_steps": uni["decode_steps"],
+        "continuous_decode_steps": sched.decode_steps,
+        "uniform_tok_per_s": uni_tps,
+        "continuous_tok_per_s": cont_tps,
+        "throughput_speedup": cont_tps / uni_tps,
+        "uniform_mean_latency_steps": float(np.mean(uni_lat)),
+        "continuous_mean_latency_steps": float(np.mean(cont_lat)),
+        "uniform_p90_latency_steps": float(np.percentile(uni_lat, 90)),
+        "continuous_p90_latency_steps": float(np.percentile(cont_lat, 90)),
+        "exact_mismatch_tokens": mismatch,
+        "uniform_mismatch_tokens": uni_mismatch,
+    }
+
+
+def cnn_coalesce_row(*, width_mult: float = 0.125, img: int = 32,
+                     n_requests: int = 6, seed: int = 0) -> dict:
+    """Coalesced vs per-request CNN inference on the 8-device host mesh.
+
+    Request sizes are ragged on purpose: the merged batch does not divide
+    the mesh's "data" axis, exercising the pad-and-crop path end to end.
+    """
+    import time
+
+    from repro.launch.mesh import host_mesh
+    from repro.models.cnn import vgg16_forward, vgg16_init
+    from repro.serve import CoalescingConvServeEngine, ConvServeEngine
+
+    mesh = host_mesh(MEASURE_DEVICES, tp=2)
+    params = vgg16_init(jax.random.PRNGKey(0), width_mult=width_mult,
+                        n_classes=10)
+    rng = np.random.RandomState(seed)
+    sizes = [int(rng.randint(1, 4)) for _ in range(n_requests)]
+    images = [jnp.asarray(rng.randn(n, img, img, 3), jnp.float32)
+              for n in sizes]
+
+    per = ConvServeEngine(vgg16_forward, params, mesh=mesh)
+    for im in images:                       # warm every per-request signature
+        per.infer(im)
+    t0 = time.perf_counter()
+    per_out = [per.infer(im) for im in images]
+    jax.block_until_ready(per_out)
+    per_s = time.perf_counter() - t0
+
+    co = CoalescingConvServeEngine(vgg16_forward, params, mesh=mesh)
+    for im in images:                       # warm the merged signature
+        co.submit(im)
+    co.flush()
+    tickets = [co.submit(im) for im in images]
+    t0 = time.perf_counter()
+    co_out = co.flush()
+    jax.block_until_ready(list(co_out.values()))
+    co_s = time.perf_counter() - t0
+
+    err = max(float(jnp.max(jnp.abs(co_out[t] - ref)))
+              for t, ref in zip(tickets, per_out))
+    return {
+        "net": f"vgg16 x{width_mult}", "img": img, "n_requests": n_requests,
+        "request_sizes": "|".join(map(str, sizes)),
+        "merged_rows": sum(sizes),
+        "data_axis": mesh.shape["data"],
+        "per_request_ms": per_s * 1e3,
+        "coalesced_ms": co_s * 1e3,
+        "coalesce_speedup": per_s / max(co_s, 1e-12),
+        "dispatches": co.coalesced_dispatches,
+        "coalesce_max_err": err,
+    }
+
+
+def run(*, n_requests: int = 24, slots: int = 4, max_new: int = 24,
+        seed: int = 0, reps: int = 3,
+        json_path: str | None = JSON_PATH) -> dict:
+    lm = lm_traffic_row(n_requests=n_requests, slots=slots, max_new=max_new,
+                        seed=seed, reps=reps)
+    emit([lm], "fig_serve_traffic: continuous vs uniform batching "
+               f"({n_requests} mixed-length requests, {slots} slots)")
+    assert lm["exact_mismatch_tokens"] == 0, (
+        "continuous-batch streams diverged from solo runs: "
+        f"{lm['exact_mismatch_tokens']} mismatched tokens")
+
+    out = {"figure": "fig_serve_traffic", "lm": lm,
+           "measured_devices": jax.device_count()}
+    if jax.device_count() >= MEASURE_DEVICES:
+        cnn = cnn_coalesce_row(seed=seed)
+        emit([cnn], "fig_serve_traffic: coalesced vs per-request CNN "
+                    f"inference on {MEASURE_DEVICES}-device host mesh")
+        out["cnn"] = cnn
+    else:
+        print(f"# fig_serve_traffic: < {MEASURE_DEVICES} devices -- CNN "
+              "coalescing columns skipped "
+              "(run `python -m benchmarks.fig_serve_traffic`)\n")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"# fig_serve_traffic: wrote {json_path}\n")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -21,12 +21,12 @@ def main() -> int:
     ap.add_argument("--reps", type=int, default=2)
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig5,fig6,fig7,fig8,fig9,"
-                         "train_step,table2,roofline")
+                         "train_step,serve_traffic,table2,roofline")
     args = ap.parse_args()
 
     from . import (fig5_fmr_selection, fig6_libraries, fig7_fused_traffic,
-                   fig8_efficiency, fig9_parallel_modes, fig_train_step,
-                   roofline_table, table2_accuracy)
+                   fig8_efficiency, fig9_parallel_modes, fig_serve_traffic,
+                   fig_train_step, roofline_table, table2_accuracy)
 
     suites = {
         "fig5": lambda: fig5_fmr_selection.run(args.scale, args.reps),
@@ -35,6 +35,7 @@ def main() -> int:
         "fig8": lambda: fig8_efficiency.run(args.scale, reps=args.reps),
         "fig9": lambda: fig9_parallel_modes.run(),
         "train_step": lambda: fig_train_step.run(args.scale, reps=args.reps),
+        "serve_traffic": lambda: fig_serve_traffic.run(),
         "table2": lambda: table2_accuracy.run(max(args.scale, 0.25)),
         "roofline": roofline_table.run,
     }

@@ -6,9 +6,11 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -x \
     tests/test_transforms.py tests/test_blocking.py tests/test_plan.py \
     tests/test_kernels.py tests/test_conv.py tests/test_conv_golden.py \
     tests/test_optim.py tests/test_checkpoint_data.py "$@"
-# Multi-device parallel execution + sharded gradients: separate invocation
-# so the simulated 8-device flag is installed before jax initializes
-# (conftest translates REPRO_HOST_DEVICES into XLA_FLAGS).
+# Multi-device parallel execution + sharded gradients + serving (scheduler
+# exactness, coalescing golden): separate invocation so the simulated
+# 8-device flag is installed before jax initializes (conftest translates
+# REPRO_HOST_DEVICES into XLA_FLAGS).
 REPRO_HOST_DEVICES=8 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -q -x tests/test_parallel_exec.py \
-    tests/test_conv_grad.py "$@"
+    tests/test_conv_grad.py tests/test_serve_scheduler.py \
+    tests/test_serve_coalesce.py "$@"

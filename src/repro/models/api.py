@@ -148,3 +148,51 @@ def build(cfg: ModelConfig) -> ModelApi:
         return _FAMILY_BUILDERS[cfg.family](cfg)
     except KeyError:
         raise ValueError(f"no model builder for family {cfg.family!r}") from None
+
+
+# ---------------------- continuous-batching cache utilities ----------------------
+#
+# The serve scheduler (repro.serve.scheduler) drives ONE batched cache whose
+# rows advance independently: the top-level "pos" cursor becomes a (B,)
+# vector, and admitting a request into a retired slot overwrites that row
+# with a freshly prefilled single-request cache.  These helpers are
+# family-agnostic: every ``init_cache`` in this repo yields the same treedef
+# for batch sizes B and 1, with each leaf's batch axis identifiable as the
+# unique axis whose extent differs between the two.
+
+def vector_pos_cache(cache: dict, batch: int) -> dict:
+    """Promote a fresh cache's scalar decode cursor to per-row (B,) cursors."""
+    out = dict(cache)
+    out["pos"] = jnp.full((batch,), cache["pos"], jnp.int32)
+    return out
+
+
+def _scatter_row_leaf(bl: jax.Array, rl: jax.Array, slot: jax.Array) -> jax.Array:
+    if bl.ndim == rl.ndim + 1:            # per-row scalar (the "pos" cursor)
+        return bl.at[slot].set(rl.astype(bl.dtype))
+    if bl.shape == rl.shape:              # B == 1: the row IS the batch
+        return rl.astype(bl.dtype)
+    for ax in range(bl.ndim):
+        if rl.shape[ax] == 1 and bl.shape[ax] != 1:
+            start = [0] * bl.ndim
+            start[ax] = slot
+            return jax.lax.dynamic_update_slice(
+                bl, rl.astype(bl.dtype), tuple(start))
+    raise ValueError(f"no batch axis between {bl.shape} and {rl.shape}")
+
+
+def cache_scatter_row(batch_cache: dict, row_cache: dict, slot) -> dict:
+    """Write a single-request cache (``init_cache(1, max_len)`` after
+    prefill) into row ``slot`` of a per-row-cursor batched cache.
+
+    The ENTIRE row is replaced -- every cache position, plus the row's
+    cursor -- so a reused slot carries nothing from the retired request.
+    """
+    b_leaves, treedef = jax.tree_util.tree_flatten(batch_cache)
+    r_leaves, r_treedef = jax.tree_util.tree_flatten(row_cache)
+    if treedef != r_treedef:
+        raise ValueError(f"cache structures differ: {treedef} vs {r_treedef}")
+    slot = jnp.asarray(slot, jnp.int32)
+    return jax.tree_util.tree_unflatten(
+        treedef,
+        [_scatter_row_leaf(b, r, slot) for b, r in zip(b_leaves, r_leaves)])

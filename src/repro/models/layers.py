@@ -137,11 +137,18 @@ _NEG = jnp.float32(-1e30)
 
 
 def _mask_chunk(qpos, kpos, window, kv_len_mask_chunk):
-    """(qc, 1) x (1, kc) -> bool mask; window may be a traced int32."""
+    """(qc, 1) x (1, kc) -> bool mask; window may be a traced int32.
+
+    qpos may carry a leading batch dim (B, qc, 1) when the decode batch has
+    per-row cursors (continuous batching); the mask then resolves per row.
+    """
     mask = kpos <= qpos
     if window is not None:
         mask &= kpos > qpos - window
-    mask = mask[None, None, None]                           # (1,1,1,qc,kc)
+    if mask.ndim == 3:                                      # per-row cursors
+        mask = mask[:, None, None]                          # (B,1,1,qc,kc)
+    else:
+        mask = mask[None, None, None]                       # (1,1,1,qc,kc)
     if kv_len_mask_chunk is not None:
         mask = mask & kv_len_mask_chunk[:, None, None, None, :]
     return mask
@@ -159,8 +166,14 @@ def _attn_plain(q, k, v, *, causal_offset, window, softcap, kv_len_mask):
     scores = constrain(scores, "batch", kv_ax, g_ax, None, None)
     if softcap is not None:
         scores = jnp.tanh(scores / softcap) * softcap
-    qpos = jnp.arange(Sq)[:, None] + causal_offset          # (Sq, 1) key-space pos
-    kpos = jnp.arange(k.shape[1])[None, :]                  # (1, Sk)
+    if jnp.ndim(causal_offset) == 1:
+        # per-row decode cursors (continuous batching): offset (B,)
+        qpos = (jnp.asarray(causal_offset, jnp.int32)[:, None, None]
+                + jnp.arange(Sq)[None, :, None])            # (B, Sq, 1)
+        kpos = jnp.arange(k.shape[1])[None, None, :]        # (1, 1, Sk)
+    else:
+        qpos = jnp.arange(Sq)[:, None] + causal_offset      # (Sq, 1) key-space pos
+        kpos = jnp.arange(k.shape[1])[None, :]              # (1, Sk)
     mask = _mask_chunk(qpos, kpos, window, kv_len_mask)
     scores = jnp.where(mask, scores, _NEG)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
@@ -449,12 +462,17 @@ def _attn_core(
     seq_axes: tuple[str, ...] | None = None,   # decode: S-sharded cache
 ) -> jax.Array:
     Sq, Sk = q.shape[1], k.shape[1]
-    if seq_axes and Sq == 1 and Sk % max(
+    # per-row decode cursors ((B,) causal offset) only reach the plain path:
+    # split-K broadcasts a scalar offset into the shard_map and the flash
+    # q-chunking assumes a shared qpos base.
+    per_row = jnp.ndim(causal_offset) == 1
+    if seq_axes and Sq == 1 and not per_row and Sk % max(
             1, _mesh_prod(get_abstract_mesh(), seq_axes)) == 0:
         return _attn_decode_splitk(
             q, k, v, causal_offset=causal_offset, window=window,
             softcap=softcap, kv_len_mask=kv_len_mask, seq_axes=seq_axes)
-    if Sq > 1 and Sq % q_chunk == 0 and Sk % kv_chunk == 0 and Sq >= q_chunk:
+    if (Sq > 1 and not per_row
+            and Sq % q_chunk == 0 and Sk % kv_chunk == 0 and Sq >= q_chunk):
         return _attn_flash(
             q, k, v, causal_offset=causal_offset, window=window,
             softcap=softcap, kv_len_mask=kv_len_mask,
@@ -481,7 +499,10 @@ def attention(
 
     cache: {"k": (B, Smax, KV, hd), "v": ..., "pos": scalar int32} -- new keys
     are written at [pos : pos+Sq] and attention runs over the full cache with
-    a validity mask.  Returns (out, updated_cache).
+    a validity mask.  ``pos`` may instead be a (B,) vector of per-row decode
+    cursors (continuous batching): row b writes at [pos_b : pos_b+Sq] and
+    masks keys >= pos_b+Sq, so a batch of requests at ragged positions
+    decodes in one step.  Returns (out, updated_cache).
     """
     B, Sq, d = x.shape
     q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
@@ -504,11 +525,21 @@ def attention(
     new_cache = None
     if cache is not None:
         pos = cache["pos"]
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        if jnp.ndim(pos) == 1:
+            # per-row cursors: row b writes its Sq new keys at pos_b
+            def _row_upd(c, new, p):
+                return jax.lax.dynamic_update_slice(c, new, (p, 0, 0))
+
+            ck = jax.vmap(_row_upd)(cache["k"], k.astype(cache["k"].dtype), pos)
+            cv = jax.vmap(_row_upd)(cache["v"], v.astype(cache["v"].dtype), pos)
+            kv_len_mask = (jnp.arange(ck.shape[1])[None, :]
+                           < (pos + Sq)[:, None])
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            kv_len_mask = (jnp.arange(ck.shape[1]) < pos + Sq)[None].astype(bool)
+            kv_len_mask = jnp.broadcast_to(kv_len_mask, (B, ck.shape[1]))
         new_cache = {"k": ck, "v": cv, "pos": pos + Sq}
-        kv_len_mask = (jnp.arange(ck.shape[1]) < pos + Sq)[None].astype(bool)
-        kv_len_mask = jnp.broadcast_to(kv_len_mask, (B, ck.shape[1]))
         # which mesh axes shard the cache's sequence axis (split-K decode)
         tp = axis_size("model")
         bat_prod = axis_size("pod") * axis_size("data")

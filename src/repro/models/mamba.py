@@ -294,7 +294,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
 def _forward_cached(params, cfg, tokens, cache, chunk):
     B, S = tokens.shape
     pos0 = cache["pos"]
-    positions = pos0 + jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    base = pos0[:, None] if jnp.ndim(pos0) == 1 else pos0  # per-row cursors
+    positions = base + jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
     x = L.embed(params["embed"], tokens, cfg).astype(jnp.dtype(cfg.dtype))
     shared = params["shared"]
 

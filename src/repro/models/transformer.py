@@ -279,7 +279,10 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: dict,
             spec: tuple = DEFAULT_CACHE_SPEC):
     """tokens (B, S_prompt) -> (last-position logits (B, V), cache)."""
     B, S = tokens.shape
-    positions = cache["pos"] + jnp.broadcast_to(
+    pos0 = cache["pos"]
+    if jnp.ndim(pos0) == 1:                 # per-row cursors: (B,) base
+        pos0 = pos0[:, None]
+    positions = pos0 + jnp.broadcast_to(
         jnp.arange(S, dtype=jnp.int32)[None], (B, S)
     )
     logits, cache = _forward_cached(params, cfg, tokens, cache, positions, spec)
@@ -288,8 +291,16 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: dict,
 
 def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: dict,
                 spec: tuple = DEFAULT_CACHE_SPEC):
-    """token (B, 1) -> (logits (B, V), cache).  One new token vs full cache."""
+    """token (B, 1) -> (logits (B, V), cache).  One new token vs full cache.
+
+    ``cache["pos"]`` may be a (B,) vector of per-row decode cursors
+    (continuous batching): each row attends/writes at its own position.
+    """
     B = token.shape[0]
-    positions = jnp.broadcast_to(cache["pos"][None, None], (B, 1)).astype(jnp.int32)
+    pos = cache["pos"]
+    if jnp.ndim(pos) == 1:
+        positions = pos[:, None].astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
     logits, cache = _forward_cached(params, cfg, token, cache, positions, spec)
     return logits[:, -1, :], cache

@@ -1,1 +1,4 @@
-from .engine import ConvServeEngine, ServeEngine  # noqa: F401
+from .engine import (CacheOverflowError, CoalescingConvServeEngine,  # noqa: F401
+                     ConvServeEngine, ServeEngine)
+from .scheduler import (Completion, ContinuousBatchingScheduler,  # noqa: F401
+                        Request, poisson_schedule, run_uniform_batches)

@@ -1,0 +1,328 @@
+"""Continuous-batching scheduler: slot pool over per-row KV cursors.
+
+The serving analogue of the paper's amortization argument: layout /
+blocking / mode decisions are resolved once (the jitted prefill + masked
+decode traces), and the steady-state decode path stays saturated by
+refilling retired batch slots from the pending queue instead of draining
+the whole batch (the `ServeEngine.generate` uniform mode).
+
+One ``ContinuousBatchingScheduler`` owns
+
+  * a fixed pool of ``slots`` batch rows over ONE per-row-cursor cache
+    (``ServeEngine.new_batch_cache``): row b's cursor is ``cache["pos"][b]``;
+  * a pending FIFO of submitted ``Request``s;
+  * per-slot state: the live token, the per-request PRNG chain, the output
+    count, and the owning request.
+
+Scheduler invariants (tested in tests/test_serve_scheduler.py):
+
+  I1  exactness   -- every request's token stream is identical to a solo
+      ``ServeEngine.generate`` of that request (temperature 0): admission
+      prefills the request alone into a fresh single-row cache (the same
+      computation a solo run does), and the batched masked decode is
+      row-independent -- per-row write index, per-row validity mask,
+      per-row RoPE positions;
+  I2  isolation   -- slot reuse carries nothing across requests:
+      ``cache_scatter_row`` replaces the ENTIRE row (every cache position
+      plus the cursor), so a retired request's K/V can never leak into its
+      slot's next occupant;
+  I3  containment -- admission rejects (it never truncates or wraps) any
+      request whose prompt_len + max_new_tokens exceeds the cache row;
+      retired rows' cursors are frozen by the masked decode so idle slots
+      cannot walk off the cache;
+  I4  liveness    -- a decode step runs whenever any slot is active;
+      retirement (length or EOS) frees the slot for the next pending
+      request before the following step.
+
+``run_uniform_batches`` is the static-batching baseline the benchmark
+(benchmarks/fig_serve_traffic.py) compares against: requests grouped in
+arrival order, each group decoding until its LONGEST member finishes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.engine import CacheOverflowError, ServeEngine
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``arrival`` is in decode-step units (the
+    scheduler's clock); ``seed`` roots the request's private RNG chain so
+    a request samples identically solo or scheduled."""
+
+    rid: int
+    prompt: Any                       # (S,) int ids
+    max_new_tokens: int
+    temperature: float = 0.0
+    seed: int = 0
+    eos_id: int | None = None
+    extras: dict | None = None        # modality extras for prefill
+    arrival: int = 0
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: list[int]
+    arrival: int
+    admitted_step: int                # decode-step when the slot was filled
+    finished_step: int                # decode-step after the last token
+
+    @property
+    def latency_steps(self) -> int:
+        return self.finished_step - self.arrival
+
+
+class ContinuousBatchingScheduler:
+    def __init__(self, engine: ServeEngine, *, slots: int):
+        if engine.api.cfg.family == "audio":
+            raise NotImplementedError(
+                "continuous batching needs per-row positions; the whisper "
+                "decoder's sinusoid offset is batch-scalar")
+        self.engine = engine
+        self.slots = slots
+        self.cache = engine.new_batch_cache(slots)
+        self.tok = jnp.zeros((slots, 1), jnp.int32)
+        self.keys = jnp.tile(jax.random.PRNGKey(0)[None], (slots, 1))
+        self.active = np.zeros(slots, bool)
+        self.slot_req: list[Request | None] = [None] * slots
+        self.n_out = np.zeros(slots, np.int64)
+        self.admitted_step = np.zeros(slots, np.int64)
+        self.pending: deque[Request] = deque()
+        self.streams: dict[int, list[int]] = {}
+        self.finished: list[Completion] = []
+        self.rejected: list[tuple[int, CacheOverflowError]] = []
+        self.step_count = 0
+        # benchmark counters: the decode loop only (admission prefills and
+        # python bookkeeping excluded -- the uniform baseline is timed the
+        # same way)
+        self.decode_steps = 0
+        self.decode_seconds = 0.0
+
+    # ------------------------------ admission ------------------------------
+
+    def _fits(self, req: Request) -> CacheOverflowError | None:
+        S = int(np.asarray(req.prompt).shape[-1])
+        if S + req.max_new_tokens > self.engine.max_len:
+            return CacheOverflowError(prompt_len=S,
+                                      max_new_tokens=req.max_new_tokens,
+                                      max_len=self.engine.max_len)
+        return None
+
+    def submit(self, req: Request, *, strict: bool = True) -> bool:
+        """Queue a request.  An oversize request is rejected here -- raised
+        with the offending lengths when ``strict``, recorded in
+        ``self.rejected`` otherwise -- and never touches the cache."""
+        err = self._fits(req)
+        if err is not None:
+            if strict:
+                raise err
+            self.rejected.append((req.rid, err))
+            return False
+        self.pending.append(req)
+        return True
+
+    def _admit_one(self, slot: int, req: Request) -> None:
+        # the same computation a solo generate performs up to its first
+        # sample: prefill alone, root-key split BEFORE the first draw
+        logits, row = self.engine.prefill_row(req.prompt, req.extras)
+        key, sub = jax.random.split(jax.random.PRNGKey(req.seed))
+        tok0 = self.engine._sample(logits, sub, req.temperature)
+        self.cache = self.engine.adopt_row(self.cache, row, slot)
+        self.tok = self.tok.at[slot, 0].set(tok0[0])
+        self.keys = self.keys.at[slot].set(key)
+        self.active[slot] = True
+        self.slot_req[slot] = req
+        self.n_out[slot] = 1
+        self.admitted_step[slot] = self.step_count
+        self.streams[req.rid] = [int(tok0[0])]
+        self._retire_if_done(slot)          # max_new_tokens == 1 / instant EOS
+
+    def _admit(self) -> None:
+        free = [b for b in range(self.slots) if not self.active[b]]
+        while free and self.pending:
+            req = self.pending.popleft()
+            err = self._fits(req)           # re-checked: reject, don't corrupt
+            if err is not None:
+                self.rejected.append((req.rid, err))
+                continue
+            slot = free.pop(0)
+            self._admit_one(slot, req)
+            if not self.active[slot]:       # retired instantly: slot reusable
+                free.insert(0, slot)
+
+    # ----------------------------- retirement -----------------------------
+
+    def _retire(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        self.finished.append(Completion(
+            rid=req.rid, tokens=self.streams[req.rid], arrival=req.arrival,
+            admitted_step=int(self.admitted_step[slot]),
+            finished_step=self.step_count))
+        self.active[slot] = False
+        self.slot_req[slot] = None
+
+    def _retire_if_done(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        stream = self.streams[req.rid]
+        if (len(stream) >= req.max_new_tokens
+                or (req.eos_id is not None and stream[-1] == req.eos_id)):
+            self._retire(slot)
+
+    # ------------------------------- stepping -------------------------------
+
+    def step(self) -> bool:
+        """Admit into free slots, then one masked decode step for the whole
+        pool.  Returns False when nothing was active (no decode ran)."""
+        self._admit()
+        if not self.active.any():
+            return False
+        active = jnp.asarray(self.active)
+        temps = jnp.asarray(
+            [r.temperature if r is not None else 0.0 for r in self.slot_req],
+            jnp.float32)
+        # one fused dispatch: masked decode + per-slot RNG-chain split
+        # (key, sub = split(key), exactly the solo loop) + per-row sample
+        # + masked token update; a retired row's burnt split is discarded
+        # at its next admission, which reseeds from the request root
+        greedy = all(r is None or r.temperature == 0.0 for r in self.slot_req)
+        t0 = time.perf_counter()
+        toks, self.tok, self.keys, self.cache = self.engine.decode_rows_sampled(
+            self.tok, self.cache, active, self.keys, temps, greedy=greedy)
+        toks.block_until_ready()
+        self.decode_seconds += time.perf_counter() - t0
+        self.decode_steps += 1
+        self.step_count += 1
+        toks_np = np.asarray(toks)
+        for b in range(self.slots):
+            if self.active[b]:
+                self.streams[self.slot_req[b].rid].append(int(toks_np[b]))
+                self.n_out[b] += 1
+                self._retire_if_done(b)
+        return True
+
+    @property
+    def useful_tokens(self) -> int:
+        return sum(len(s) for s in self.streams.values())
+
+    def run(self, requests: list[Request] | None = None,
+            *, max_steps: int | None = None) -> dict[int, Completion]:
+        """Drive to completion.  ``requests`` arrive by their ``arrival``
+        decode-step; the clock jumps forward over idle gaps."""
+        arrivals = deque(sorted(requests or [],
+                                key=lambda r: (r.arrival, r.rid)))
+        while arrivals or self.pending or self.active.any():
+            while arrivals and arrivals[0].arrival <= self.step_count:
+                self.submit(arrivals.popleft(), strict=False)
+            if not self.step():
+                if arrivals:                # idle until the next arrival
+                    self.step_count = max(self.step_count,
+                                          arrivals[0].arrival)
+                    continue
+                break                       # pending all rejected, pool idle
+            if max_steps is not None and self.step_count >= max_steps:
+                break
+        return {c.rid: c for c in self.finished}
+
+
+def poisson_schedule(n_requests: int, vocab: int, *, prompt_len: int = 8,
+                     min_new: int = 2, max_new: int = 24,
+                     mean_gap: float = 1.0, temperature: float = 0.0,
+                     seed: int = 0) -> list[Request]:
+    """Seeded mixed-length synthetic arrival schedule (the one schedule
+    generator shared by the CLI driver and the traffic benchmark):
+    Poisson-gapped arrivals in decode-step units, uniform prompt length,
+    generation lengths uniform in [min_new, max_new]."""
+    rng = np.random.RandomState(seed)
+    arrivals = np.cumsum(rng.poisson(mean_gap, n_requests))
+    return [
+        Request(rid=i,
+                prompt=rng.randint(0, vocab, size=prompt_len),
+                max_new_tokens=int(rng.randint(min_new, max_new + 1)),
+                temperature=temperature,
+                seed=seed + i,
+                arrival=int(a))
+        for i, a in enumerate(arrivals)
+    ]
+
+
+# --------------------------- static-batching baseline ---------------------------
+
+def run_uniform_batches(engine: ServeEngine, requests: list[Request],
+                        *, slots: int) -> dict:
+    """Uniform (static) batching: requests grouped in arrival order into
+    batches of ``slots``; each batch prefills together and decodes until
+    its LONGEST member finishes (drained slots burn dead decode); the next
+    batch waits for the previous one to finish AND its members to arrive.
+
+    Greedy, token-only requests (the benchmark comparison runs at
+    temperature 0; per-request modality extras would need per-row prefill
+    -- that is the scheduler's job).  Prompt lengths must be uniform
+    within a group -- the engine's uniform-cursor contract.  Returns
+    streams, per-request latency in decode steps, and the decode-loop
+    wall time measured exactly like the scheduler's.
+
+    Latency convention (matches ``Completion.latency_steps``): prefill is
+    not charged a decode step in either policy, so a request whose batch
+    starts at ``start`` finishes its n tokens at ``start + n - 1`` and a
+    batch occupies the engine for ``n_max - 1`` steps.
+    """
+    streams: dict[int, list[int]] = {}
+    latency: dict[int, int] = {}
+    decode_steps = 0
+    decode_seconds = 0.0
+    clock = 0
+    reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    for at in range(0, len(reqs), slots):
+        group = reqs[at:at + slots]
+        assert not any(r.extras for r in group), \
+            "uniform batching cannot mix per-request extras"
+        S = {int(np.asarray(r.prompt).shape[-1]) for r in group}
+        assert len(S) == 1, f"uniform batching needs uniform prompt lens, got {S}"
+        n_max = max(r.max_new_tokens for r in group)
+        if S.pop() + n_max > engine.max_len:
+            raise CacheOverflowError(
+                prompt_len=max(int(np.asarray(r.prompt).shape[-1])
+                               for r in group),
+                max_new_tokens=n_max, max_len=engine.max_len)
+        prompts = jnp.stack([jnp.asarray(r.prompt, jnp.int32) for r in group])
+        cache = engine.api.init_cache(len(group), engine.max_len)
+        batch = {"tokens": prompts}
+        logits, cache = engine._prefill(engine.params, batch, cache)
+        tok = jnp.argmax(logits[..., : engine.api.cfg.vocab], -1)
+        outs = [np.asarray(tok)]
+        for _ in range(n_max - 1):
+            t0 = time.perf_counter()
+            logits, cache = engine._decode(engine.params, tok[:, None], cache)
+            tok = jnp.argmax(logits[..., : engine.api.cfg.vocab], -1)
+            tok.block_until_ready()
+            decode_seconds += time.perf_counter() - t0
+            decode_steps += 1
+            outs.append(np.asarray(tok))
+        toks = np.stack(outs, axis=0)               # (n_max, B)
+        # the batch can't start before its LAST member arrived, nor before
+        # the previous batch drained; member j's final token lands
+        # max_new_tokens - 1 decode steps after the start (prefill free,
+        # the scheduler's Completion convention)
+        start = max(clock, max(r.arrival for r in group))
+        for j, r in enumerate(group):
+            streams[r.rid] = [int(t) for t in toks[: r.max_new_tokens, j]]
+            latency[r.rid] = start + r.max_new_tokens - 1 - r.arrival
+        clock = start + n_max - 1
+    return {
+        "streams": streams,
+        "latency_steps": latency,
+        "decode_steps": decode_steps,
+        "decode_seconds": decode_seconds,
+        "useful_tokens": sum(len(s) for s in streams.values()),
+        "total_steps": clock,
+    }

@@ -1,0 +1,118 @@
+"""Request coalescing for CNN serving: golden vs per-request inference.
+
+``CoalescingConvServeEngine`` merges concurrent ragged requests into one
+padded, mesh-sharded batch (keyed on per-image shape + dtype + algorithm,
+i.e. the engine's ConvPlan/jit signature) and scatters results back.  The
+golden property: coalesced results == per-request single-device inference,
+across all three executed parallel modes, including merged batches that do
+NOT divide the mesh's "data" axis.  Runs on the ``host_mesh8`` fixture
+(8 simulated devices in-process under REPRO_HOST_DEVICES=8, re-exec
+subprocess otherwise -- tests/conftest.py).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.cnn import vgg16_forward, vgg16_init
+from repro.serve import CoalescingConvServeEngine, ConvServeEngine
+
+MODES = ("data", "2d", "model")
+
+
+def _setup(seed=0, n_requests=4, img=32):
+    params = vgg16_init(jax.random.PRNGKey(1), width_mult=0.125, n_classes=10)
+    rng = np.random.RandomState(seed)
+    sizes = [1, 2, 1, 3][:n_requests]          # merged 7: ragged on dp=4
+    images = [jnp.asarray(rng.randn(n, img, img, 3), jnp.float32)
+              for n in sizes]
+    return params, images
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_coalesced_matches_per_request_all_modes(host_mesh8, mode):
+    """Coalesced + mesh-sharded under a forced executor mode == unsharded
+    per-request inference; the ragged merged batch (7 rows on a 4-wide
+    "data" axis) exercises the pad-and-crop path."""
+    params, images = _setup()
+    ref_engine = ConvServeEngine(vgg16_forward, params, algorithm="winograd")
+    refs = [ref_engine.infer(im) for im in images]
+
+    co = CoalescingConvServeEngine(vgg16_forward, params,
+                                   algorithm="winograd", mesh=host_mesh8,
+                                   parallel_mode=mode)
+    tickets = [co.submit(im) for im in images]
+    assert co.pending_requests == len(images)
+    out = co.flush()
+    assert co.pending_requests == 0
+    assert co.coalesced_dispatches == 1        # one merged dispatch
+    assert co.coalesced_requests == len(images)
+    for t, im, ref in zip(tickets, images, refs):
+        assert out[t].shape == (im.shape[0], 10)
+        np.testing.assert_allclose(np.asarray(out[t]), np.asarray(ref),
+                                   atol=2e-3, rtol=2e-3)
+
+
+def test_coalesce_shares_one_padded_signature(host_mesh8):
+    """All requests with one coalescing key share ONE compiled entry (the
+    padded merged shape), the amortization the coalescer buys."""
+    params, images = _setup()
+    co = CoalescingConvServeEngine(vgg16_forward, params,
+                                   algorithm="winograd", mesh=host_mesh8)
+    for im in images:
+        co.submit(im)
+    co.flush()
+    assert co.engine.compiled_signatures == 1
+
+
+def test_coalesce_groups_by_key(host_mesh8):
+    """Different image shapes cannot share a trace: they flush as separate
+    merged dispatches, each still correct."""
+    params, _ = _setup()
+    rng = np.random.RandomState(7)
+    small = jnp.asarray(rng.randn(2, 32, 32, 3), jnp.float32)
+    big = jnp.asarray(rng.randn(1, 64, 64, 3), jnp.float32)
+    ref = ConvServeEngine(vgg16_forward, params, algorithm="winograd")
+    co = CoalescingConvServeEngine(vgg16_forward, params,
+                                   algorithm="winograd", mesh=host_mesh8)
+    ts, tb = co.submit(small), co.submit(big)
+    assert co.coalesce_key(small) != co.coalesce_key(big)
+    out = co.flush()
+    assert co.coalesced_dispatches == 2
+    np.testing.assert_allclose(np.asarray(out[ts]),
+                               np.asarray(ref.infer(small)),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(out[tb]),
+                               np.asarray(ref.infer(big)),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_max_coalesce_caps_merged_rows():
+    """A row cap splits one key group into several dispatches (no mesh
+    needed: the cap is pure batching policy)."""
+    params, images = _setup()
+    ref = ConvServeEngine(vgg16_forward, params, algorithm="winograd")
+    co = CoalescingConvServeEngine(vgg16_forward, params,
+                                   algorithm="winograd", max_coalesce=3)
+    tickets = [co.submit(im) for im in images]       # rows 1,2,1,3
+    out = co.flush()
+    assert co.coalesced_dispatches == 3              # [1,2], [1], [3]
+    for t, im in zip(tickets, images):
+        np.testing.assert_allclose(np.asarray(out[t]),
+                                   np.asarray(ref.infer(im)),
+                                   atol=2e-3, rtol=2e-3)
+
+
+def test_coalesce_without_mesh_matches_per_request():
+    """Plain single-device coalescing (merge + scatter only)."""
+    params, images = _setup(n_requests=3)
+    ref = ConvServeEngine(vgg16_forward, params, algorithm="winograd")
+    co = CoalescingConvServeEngine(vgg16_forward, params,
+                                   algorithm="winograd")
+    tickets = [co.submit(im) for im in images]
+    out = co.flush()
+    for t, im in zip(tickets, images):
+        np.testing.assert_allclose(np.asarray(out[t]),
+                                   np.asarray(ref.infer(im)),
+                                   atol=1e-4, rtol=1e-4)

@@ -1,0 +1,316 @@
+"""Continuous-batching scheduler: exactness, cursor arithmetic, overflow.
+
+The load-bearing property (DESIGN.md SS7 invariant I1): under ANY
+admission/retirement schedule, a request's token stream is identical to a
+solo ``ServeEngine.generate`` run of that request -- admission prefills the
+request alone, and the batched masked decode is row-independent (per-row
+write index, validity mask, RoPE position).  The property test drives
+randomized schedules through the hypothesis shim mini-grid
+(tests/conftest.py); the unit tests pin the per-row write-index arithmetic
+against a dense recompute and the per-row reference path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import configs
+from repro.models import layers as L
+from repro.models.api import build, cache_scatter_row, vector_pos_cache
+from repro.serve import (CacheOverflowError, ContinuousBatchingScheduler,
+                         Request, ServeEngine, run_uniform_batches)
+
+MAX_LEN = 40
+
+_ENGINES: dict = {}
+
+
+def get_engine(arch: str = "chatglm3_6b", max_len: int = MAX_LEN) -> ServeEngine:
+    """Module-cached engine: shares jit traces across examples/tests."""
+    key = (arch, max_len)
+    if key not in _ENGINES:
+        cfg = configs.get_smoke_config(arch)
+        api = build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        _ENGINES[key] = ServeEngine(api, params, max_len=max_len)
+    return _ENGINES[key]
+
+
+_SOLO: dict = {}
+
+
+def solo_stream(engine: ServeEngine, prompt, max_new: int,
+                temperature: float = 0.0, seed: int = 0) -> list[int]:
+    key = (id(engine), tuple(int(t) for t in prompt), max_new, temperature, seed)
+    if key not in _SOLO:
+        out = engine.generate(jnp.asarray(prompt, jnp.int32)[None],
+                              max_new_tokens=max_new,
+                              temperature=temperature, seed=seed)
+        _SOLO[key] = [int(t) for t in np.asarray(out[0])]
+    return _SOLO[key]
+
+
+def make_schedule(rng: np.random.RandomState, vocab: int, n_requests: int,
+                  temperature: float = 0.0):
+    reqs = []
+    for i in range(n_requests):
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.randint(0, vocab, size=int(rng.choice([4, 6, 8]))),
+            max_new_tokens=int(rng.randint(1, 7)),
+            temperature=temperature,
+            seed=int(rng.randint(0, 100)),
+            arrival=int(rng.randint(0, 5)),
+        ))
+    return reqs
+
+
+# ------------------------- exactness property tests -------------------------
+
+@settings(max_examples=6)
+@given(seed=st.integers(0, 7), slots=st.sampled_from([2, 3]),
+       n_requests=st.integers(3, 8))
+def test_streams_bitwise_match_solo_runs(seed, slots, n_requests):
+    """I1: every scheduled stream == the solo greedy stream, token for
+    token, under randomized prompts/lengths/arrivals and slot churn."""
+    engine = get_engine()
+    rng = np.random.RandomState(seed)
+    reqs = make_schedule(rng, engine.api.cfg.vocab, n_requests)
+    sched = ContinuousBatchingScheduler(engine, slots=slots)
+    done = sched.run(reqs)
+    assert set(done) == {r.rid for r in reqs}
+    for r in reqs:
+        assert done[r.rid].tokens == solo_stream(engine, r.prompt,
+                                                 r.max_new_tokens), r.rid
+
+
+@settings(max_examples=4)
+@given(seed=st.integers(0, 7), cut=st.integers(0, 3))
+def test_eos_retirement_truncates_exactly(seed, cut):
+    """EOS retirement: set a request's eos_id to the token its solo run
+    emits at position ``cut`` -- the scheduled stream must stop right
+    there, and the freed slot must serve the NEXT request exactly."""
+    engine = get_engine()
+    rng = np.random.RandomState(100 + seed)
+    reqs = make_schedule(rng, engine.api.cfg.vocab, 4)
+    victim = reqs[1]
+    victim.max_new_tokens = 6
+    ref = solo_stream(engine, victim.prompt, victim.max_new_tokens)
+    victim.eos_id = ref[cut]
+    first_hit = ref.index(victim.eos_id)
+    sched = ContinuousBatchingScheduler(engine, slots=2)
+    done = sched.run(reqs)
+    assert done[victim.rid].tokens == ref[: first_hit + 1]
+    for r in reqs:
+        if r.rid != victim.rid:
+            assert done[r.rid].tokens == solo_stream(engine, r.prompt,
+                                                     r.max_new_tokens)
+
+
+def test_temperature_sampling_matches_solo_chain():
+    """The per-slot RNG chain replicates the solo generate chain, so even
+    temperature>0 streams are identical solo vs scheduled."""
+    engine = get_engine()
+    rng = np.random.RandomState(3)
+    reqs = [Request(rid=i, prompt=rng.randint(0, engine.api.cfg.vocab, 6),
+                    max_new_tokens=5, temperature=0.7, seed=10 + i)
+            for i in range(4)]
+    done = ContinuousBatchingScheduler(engine, slots=2).run(reqs)
+    for r in reqs:
+        assert done[r.rid].tokens == solo_stream(
+            engine, r.prompt, r.max_new_tokens, temperature=0.7, seed=r.seed)
+
+
+def test_single_slot_serializes_exactly():
+    """slots=1: pure slot-reuse churn -- every request flows through the
+    SAME cache row back to back (I2 isolation)."""
+    engine = get_engine()
+    rng = np.random.RandomState(17)
+    reqs = make_schedule(rng, engine.api.cfg.vocab, 4)
+    done = ContinuousBatchingScheduler(engine, slots=1).run(reqs)
+    for r in reqs:
+        assert done[r.rid].tokens == solo_stream(engine, r.prompt,
+                                                 r.max_new_tokens)
+
+
+def test_uniform_baseline_matches_solo():
+    """The static-batching baseline must also be exact (same prompt len),
+    so the benchmark's throughput comparison is apples to apples."""
+    engine = get_engine()
+    rng = np.random.RandomState(5)
+    reqs = [Request(rid=i, prompt=rng.randint(0, engine.api.cfg.vocab, 8),
+                    max_new_tokens=int(rng.randint(2, 6)))
+            for i in range(5)]
+    uni = run_uniform_batches(engine, reqs, slots=2)
+    for r in reqs:
+        assert uni["streams"][r.rid] == solo_stream(engine, r.prompt,
+                                                    r.max_new_tokens)
+
+
+# ---------------- per-row cursor / write-index unit tests ----------------
+
+def test_attention_vector_pos_equals_per_row_reference():
+    """One batched decode with (B,) cursors == B scalar-cursor decodes,
+    bitwise: the cache writes are copies and the per-row masks identical."""
+    cfg = configs.get_smoke_config("chatglm3_6b")
+    B, Smax, d = 4, 12, cfg.d_model
+    KV, hd = cfg.n_kv_heads_eff, cfg.head_dim
+    p = L.attn_init(jax.random.PRNGKey(0), cfg)
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(1), 3)
+    ck = jax.random.normal(k0, (B, Smax, KV, hd), jnp.float32)
+    cv = jax.random.normal(k1, (B, Smax, KV, hd), jnp.float32)
+    x = jax.random.normal(k2, (B, 1, d), jnp.float32)
+    pos = jnp.asarray([0, 3, 7, 11], jnp.int32)        # ragged, incl. edges
+
+    out_b, nc_b = L.attention(p, x, cfg, positions=pos[:, None],
+                              cache={"k": ck, "v": cv, "pos": pos})
+    for b in range(B):
+        out_r, nc_r = L.attention(
+            p, x[b:b + 1], cfg, positions=pos[b:b + 1, None],
+            cache={"k": ck[b:b + 1], "v": cv[b:b + 1], "pos": pos[b]})
+        np.testing.assert_array_equal(np.asarray(nc_b["k"][b]),
+                                      np.asarray(nc_r["k"][0]))
+        np.testing.assert_array_equal(np.asarray(nc_b["v"][b]),
+                                      np.asarray(nc_r["v"][0]))
+        np.testing.assert_array_equal(np.asarray(out_b[b]),
+                                      np.asarray(out_r[0]))
+    assert nc_b["pos"].shape == (B,)
+    np.testing.assert_array_equal(np.asarray(nc_b["pos"]), np.asarray(pos) + 1)
+
+
+def test_vector_pos_write_index_dense_recompute():
+    """Write-index arithmetic against a dense numpy recompute: row b's new
+    key lands at exactly [b, pos_b] and every other cache position is
+    untouched."""
+    cfg = configs.get_smoke_config("chatglm3_6b")
+    B, Smax, d = 3, 10, cfg.d_model
+    p = L.attn_init(jax.random.PRNGKey(0), cfg)
+    KV, hd = cfg.n_kv_heads_eff, cfg.head_dim
+    base_k = jax.random.normal(jax.random.PRNGKey(4), (B, Smax, KV, hd))
+    base_v = jax.random.normal(jax.random.PRNGKey(5), (B, Smax, KV, hd))
+    x = jax.random.normal(jax.random.PRNGKey(6), (B, 1, d), jnp.float32)
+    pos = jnp.asarray([2, 9, 5], jnp.int32)
+
+    _, nc = L.attention(p, x, cfg, positions=pos[:, None],
+                        cache={"k": base_k, "v": base_v, "pos": pos})
+    # dense recompute of the expected cache: project k/v, rope at pos_b,
+    # write row-by-row in numpy
+    k_new = jnp.einsum("bsd,dnh->bsnh", x, p["wk"])
+    cos, sin = L.rope_angles(cfg, pos[:, None])
+    k_new = L.apply_rope(k_new, cos, sin, cfg)
+    v_new = jnp.einsum("bsd,dnh->bsnh", x, p["wv"])
+    want_k, want_v = np.asarray(base_k).copy(), np.asarray(base_v).copy()
+    for b in range(B):
+        want_k[b, int(pos[b])] = np.asarray(k_new[b, 0])
+        want_v[b, int(pos[b])] = np.asarray(v_new[b, 0])
+    np.testing.assert_array_equal(np.asarray(nc["k"]), want_k)
+    np.testing.assert_array_equal(np.asarray(nc["v"]), want_v)
+
+
+@pytest.mark.parametrize("arch", ["chatglm3_6b", "rwkv6_1_6b", "zamba2_7b"])
+def test_cache_scatter_row_reassembles_batch(arch):
+    """Rows prefilled solo and scattered into a per-row-cursor batch cache
+    decode bitwise-identically to their solo decode -- for every cache
+    family (KV, recurrent state, hybrid periods)."""
+    cfg = configs.get_smoke_config(arch)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    max_len, B = 24, 3
+    prompts = [jax.random.randint(jax.random.PRNGKey(i + 1), (1, s), 0,
+                                  cfg.vocab)
+               for i, s in enumerate([4, 7, 5])]
+    rows, toks = [], []
+    for pr in prompts:
+        c = api.init_cache(1, max_len)
+        lg, c = api.prefill(params, {"tokens": pr}, c)
+        rows.append(c)
+        toks.append(jnp.argmax(lg[..., : cfg.vocab], -1))
+    bc = vector_pos_cache(api.init_cache(B, max_len), B)
+    for i, rc in enumerate(rows):
+        bc = cache_scatter_row(bc, rc, i)
+    np.testing.assert_array_equal(np.asarray(bc["pos"]), [4, 7, 5])
+    tok = jnp.stack([t[0] for t in toks])[:, None]
+    lg_b, bc2 = api.decode_step(params, tok, bc)
+    np.testing.assert_array_equal(np.asarray(bc2["pos"]), [5, 8, 6])
+    for i, (rc, t) in enumerate(zip(rows, toks)):
+        lg_s, _ = api.decode_step(params, t[:, None], rc)
+        np.testing.assert_array_equal(np.asarray(lg_b[i]), np.asarray(lg_s[0]))
+
+
+def test_slot_reuse_scatter_replaces_entire_row():
+    """I2: after scatter, no leaf element of the reused row differs from a
+    freshly assembled row (nothing survives the previous occupant)."""
+    cfg = configs.get_smoke_config("chatglm3_6b")
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    bc = vector_pos_cache(api.init_cache(2, 16), 2)
+    # occupy row 1 with request A, then overwrite with request B
+    for seed, S in [(1, 9), (2, 4)]:
+        pr = jax.random.randint(jax.random.PRNGKey(seed), (1, S), 0, cfg.vocab)
+        c = api.init_cache(1, 16)
+        _, c = api.prefill(params, {"tokens": pr}, c)
+        bc = cache_scatter_row(bc, c, 1)
+    fresh = vector_pos_cache(api.init_cache(2, 16), 2)
+    fresh = cache_scatter_row(fresh, c, 1)
+    for got, want in zip(jax.tree_util.tree_leaves(bc),
+                         jax.tree_util.tree_leaves(fresh)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------- overflow / rejection -------------------------
+
+def test_generate_overflow_is_typed_with_lengths():
+    engine = get_engine()
+    with pytest.raises(CacheOverflowError) as ei:
+        engine.generate(jnp.zeros((1, MAX_LEN - 2), jnp.int32),
+                        max_new_tokens=5)
+    err = ei.value
+    assert isinstance(err, ValueError)          # typed, not a bare assert
+    assert err.prompt_len == MAX_LEN - 2
+    assert err.max_new_tokens == 5
+    assert err.max_len == MAX_LEN
+    assert str(MAX_LEN) in str(err) and str(MAX_LEN - 2) in str(err)
+
+
+def test_submit_rejects_oversize_strict_raises():
+    engine = get_engine()
+    sched = ContinuousBatchingScheduler(engine, slots=2)
+    with pytest.raises(CacheOverflowError):
+        sched.submit(Request(rid=0, prompt=np.zeros(MAX_LEN, np.int64),
+                             max_new_tokens=1))
+    assert not sched.pending and not sched.active.any()
+
+
+def test_midstream_admission_rejects_without_corruption():
+    """An oversize prompt arriving mid-stream is rejected (recorded, never
+    prefilled) and every fitting request's stream stays exact."""
+    engine = get_engine()
+    rng = np.random.RandomState(11)
+    reqs = make_schedule(rng, engine.api.cfg.vocab, 4)
+    for r in reqs:
+        r.arrival = 0
+    oversize = Request(rid=99, prompt=rng.randint(0, engine.api.cfg.vocab,
+                                                  MAX_LEN - 1),
+                       max_new_tokens=4, arrival=2)   # arrives mid-decode
+    sched = ContinuousBatchingScheduler(engine, slots=2)
+    done = sched.run(reqs + [oversize])
+    assert [rid for rid, _ in sched.rejected] == [99]
+    assert isinstance(sched.rejected[0][1], CacheOverflowError)
+    assert 99 not in done
+    for r in reqs:
+        assert done[r.rid].tokens == solo_stream(engine, r.prompt,
+                                                 r.max_new_tokens)
+
+
+def test_latency_accounting():
+    """Completion latency covers arrival -> last token in decode steps."""
+    engine = get_engine()
+    req = Request(rid=0, prompt=np.arange(4), max_new_tokens=3, arrival=2)
+    done = ContinuousBatchingScheduler(engine, slots=2).run([req])
+    c = done[0]
+    assert c.arrival == 2 and c.finished_step >= c.admitted_step
+    assert c.latency_steps == c.finished_step - 2
+    assert len(c.tokens) == 3

@@ -17,6 +17,21 @@ real, Pallas kernel performance modeled separately), plus a full
 fwd+bwd(dx, dw) step per layer through each stack.  A correctness column
 reports the max |winograd_dw - xla_dw| so the table is self-validating.
 
+Since the single-pass fused backward landed, the table also measures the
+whole (dx, dw) backward both ways:
+
+  fused_bwd_ms     ``wg.winograd_backward_reference`` -- the adjoint
+                   single-pass formulation (gy transformed once, shared V,
+                   both gradients from one Winograd-domain pass); the jnp
+                   twin of ``kernels/wino_fused_bwd``
+  two_pass_bwd_ms  the PR-3 pair: rotated-filter Winograd conv for dx +
+                   the F(r, m) filter-gradient pipeline for dw
+
+with a ``fused_bwd_err`` column vs the XLA VJP.  The err columns are a
+hard CI gate: any layer beyond ``ERR_TOL`` (relative to the gradient
+scale) exits nonzero, so ``make bench-smoke`` doubles as a correctness
+check.
+
 Emits ``BENCH_train_step.json`` for CI tracking.
 """
 
@@ -35,6 +50,11 @@ from .common import emit, scaled_layers, timeit
 
 JSON_PATH = "BENCH_train_step.json"
 
+#: fused-bwd correctness gate, relative to the gradient magnitude.  f32
+#: Winograd with F(6,3) transform amplification sits around 1e-5 relative;
+#: 2e-3 catches any structural mistake while ignoring rounding noise.
+ERR_TOL = 2e-3
+
 
 def _xla_conv(x, w, pad):
     return jax.lax.conv_general_dilated(
@@ -46,6 +66,11 @@ def _xla_dw(x, gy, w_shape, pad):
     _, vjp = jax.vjp(lambda w_: _xla_conv(x, w_, pad),
                      jnp.zeros(w_shape, jnp.float32))
     return vjp(gy)[0]
+
+
+def _xla_bwd(x, w, gy, pad):
+    _, vjp = jax.vjp(lambda x_, w_: _xla_conv(x_, w_, pad), x, w)
+    return vjp(gy)
 
 
 def run(scale: float = 0.125, *, reps: int = 3,
@@ -86,6 +111,38 @@ def run(scale: float = 0.125, *, reps: int = 3,
         t_step_wino = timeit(g_wino, x, w, reps=reps)
         t_step_xla = timeit(g_xla, x, w, reps=reps)
 
+        # ---- the whole (dx, dw) backward: single-pass vs two-pass ----
+        H, W = spec.H, spec.W
+
+        def fused_bwd(x_, w_, gy_):
+            return wg.winograd_backward_reference(x_, w_, gy_, m=m,
+                                                  pad=spec.pad)
+
+        def two_pass_bwd(x_, w_, gy_):
+            w_rot = jnp.transpose(w_[::-1, ::-1, :, :], (0, 1, 3, 2))
+            s = max(r - 1 - spec.pad, 0)
+            dx = wg.winograd_conv2d_reference(gy_, w_rot, m, pad=s)
+            crop = s - (r - 1 - spec.pad)
+            if crop:
+                dx = dx[:, crop:crop + H, crop:crop + W, :]
+            dw = wg.winograd_filter_grad_reference(x_, gy_, r=r, m=m,
+                                                   pad=spec.pad)
+            return dx, dw
+
+        fused_bwd = jax.jit(fused_bwd)
+        two_pass_bwd = jax.jit(two_pass_bwd)
+        t_fused_bwd = timeit(fused_bwd, x, w, gy, reps=reps)
+        t_two_pass = timeit(two_pass_bwd, x, w, gy, reps=reps)
+
+        dx_f, dw_f = fused_bwd(x, w, gy)
+        dx_x, dw_x = _xla_bwd(x, w, gy, spec.pad)
+        fused_err = max(
+            float(jnp.max(jnp.abs(dx_f - dx_x)))
+            / max(1.0, float(jnp.max(jnp.abs(dx_x)))),
+            float(jnp.max(jnp.abs(dw_f - dw_x)))
+            / max(1.0, float(jnp.max(jnp.abs(dw_x)))),
+        )
+
         T, _, _ = gp.spec.tiles(m)
         rows.append({
             "layer": spec.name, "H": spec.H, "C": spec.C, "K": spec.K,
@@ -98,7 +155,11 @@ def run(scale: float = 0.125, *, reps: int = 3,
             "step_wino_ms": t_step_wino * 1e3,
             "step_xla_ms": t_step_xla * 1e3,
             "step_speedup": t_step_xla / t_step_wino,
+            "fused_bwd_ms": t_fused_bwd * 1e3,
+            "two_pass_bwd_ms": t_two_pass * 1e3,
+            "bwd_speedup": t_two_pass / t_fused_bwd,
             "max_abs_err": err,
+            "fused_bwd_err": fused_err,
         })
     emit(rows, f"fig_train_step: Winograd dw vs XLA dw per Table-1 layer "
                f"(spatial x{scale})")
@@ -112,6 +173,13 @@ def run(scale: float = 0.125, *, reps: int = 3,
             json.dump({"figure": "fig_train_step", "scale": scale,
                        "rows": rows}, f, indent=2)
         print(f"# fig_train_step: wrote {json_path}\n")
+
+    # ---- hard correctness gate: bench-smoke doubles as a CI check ----
+    bad = [(row["layer"], row["fused_bwd_err"]) for row in rows
+           if not (row["fused_bwd_err"] <= ERR_TOL)]
+    if bad:
+        raise SystemExit(
+            f"fig_train_step: fused backward err beyond {ERR_TOL:g}: {bad}")
     return rows
 
 

@@ -7,10 +7,12 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -x \
     tests/test_kernels.py tests/test_conv.py tests/test_conv_golden.py \
     tests/test_optim.py tests/test_checkpoint_data.py "$@"
 # Multi-device parallel execution + sharded gradients + serving (scheduler
-# exactness, coalescing golden): separate invocation so the simulated
-# 8-device flag is installed before jax initializes (conftest translates
-# REPRO_HOST_DEVICES into XLA_FLAGS).
+# exactness, coalescing golden) + the fused-backward golden/property
+# modules: separate invocation so the simulated 8-device flag is installed
+# before jax initializes (conftest translates REPRO_HOST_DEVICES into
+# XLA_FLAGS) -- the mesh-grad tests in all five modules then run in-process.
 REPRO_HOST_DEVICES=8 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -q -x tests/test_parallel_exec.py \
     tests/test_conv_grad.py tests/test_serve_scheduler.py \
-    tests/test_serve_coalesce.py "$@"
+    tests/test_serve_coalesce.py tests/test_bwd_golden.py \
+    tests/test_grad_properties.py "$@"

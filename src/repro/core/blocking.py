@@ -151,6 +151,115 @@ def hbm_traffic_e2e(L: int, m: int, T: int, C: int, K: int, bt: int, bc: int,
     return d + reprime + u + out
 
 
+# ----------------- single-pass fused backward (wino_fused_bwd) -----------------
+#
+# The backward mirror of the e2e constraint/objective pair.  Grid is
+# (C/bc, T/bt, K/bk) with C OUTERMOST: the dU accumulator (contraction over
+# the tile axis) lives in a (L, bc, Kp) block that stays VMEM-resident for
+# one whole C sweep, the dV accumulator (contraction over K) is the dd
+# output block itself (resident across the inner K sweep), and the V-cache
+# shrinks from the forward's full-C slab to one (L, bt, bc) slice -- V is
+# consumed by the dU GEMM in the same (c, t) step it is built in, so
+# nothing wider ever needs to be resident.
+
+
+def bwd_fused_vmem_bytes(L: int, m: int, Kp: int, bt: int, bc: int, bk: int,
+                         elt: int) -> int:
+    """VMEM working set of the single-pass fused backward kernel."""
+    d_stream = 2 * bt * L * bc * elt          # double-buffered raw tiles
+    gy_stream = 2 * bt * m * m * bk * elt     # double-buffered gy tiles
+    u_stream = 2 * L * bc * bk * elt
+    v_slice = L * bt * bc * 4                 # shared V-cache slice, f32
+    do_scratch = L * bt * bk * 4              # dO^ (gy transformed once/step)
+    dd_out = 2 * bt * L * bc * 4              # dV accumulator == dd out block
+    du_out = L * bc * Kp * 4                  # full-K dU block, resident per C
+    return (d_stream + gy_stream + u_stream + v_slice + do_scratch
+            + dd_out + du_out)
+
+
+def hbm_traffic_bwd_fused(L: int, m: int, T: int, C: int, K: int, bt: int,
+                          bc: int, bk: int, elt: int) -> int:
+    """Single-pass backward traffic: d read once (its index map is constant
+    across the inner K sweep), gy tiles re-streamed once per C block, U
+    re-streamed once per tile block (as in the forward), dd and dU written
+    exactly once.  No V, Gy/dO^, or intermediate dU round trip exists."""
+    d = L * T * C * elt
+    gy = T * m * m * K * elt * _ceil_div(C, bc)
+    u = L * C * K * elt * _ceil_div(T, bt)
+    dd = L * T * C * 4
+    du = L * C * K * 4
+    return d + gy + u + dd + du
+
+
+def hbm_traffic_bwd_two_pass(L: int, m: int, T: int, C: int, K: int, bt: int,
+                             bc: int, bk: int, elt: int) -> int:
+    """Modeled traffic of the PR-3 two-pass backward at the same blocks.
+
+    dx re-runs a full forward pipeline on gy (rotated filter: tile
+    extraction with the a^2/m^2 halo + the e2e single-pass traffic with the
+    C/K roles swapped); dw runs the standalone F(r, m) pipeline: the input
+    transform's d-read + V-write round trip, the gy-side transform round
+    trip, the dU GEMM streams (X~ re-read per K block, Gy re-read per C
+    block -- the transposed-read BlockSpec means no materialized X~ copy is
+    charged), and the dU write + read for the inverse."""
+    # ---- dx: rotated-filter forward pipeline on gy ----
+    dx_tiles = T * L * K * elt                       # gy halo extraction write
+    dx_pipe = hbm_traffic_e2e(L, m, T, K, C, bt, bk, bc, elt)
+    # ---- dw: standalone F(r, m) filter-gradient pipeline ----
+    xform_v = 2 * L * T * C * elt                    # d read + V write
+    xform_gy = T * m * m * K * elt + L * T * K * elt  # gy_t read + Gy write
+    gemm = (L * T * C * _ceil_div(K, bk) * elt       # X~ streamed per K block
+            + L * T * K * _ceil_div(C, bc) * elt)    # Gy streamed per C block
+    du = 2 * L * C * K * 4                           # dU write + inverse read
+    return dx_tiles + dx_pipe + xform_v + xform_gy + gemm + du
+
+
+@functools.lru_cache(maxsize=None)
+def choose_bwd_blocks(
+    T: int,
+    C: int,
+    K: int,
+    m: int,
+    r: int,
+    elt_bytes: int = 4,
+    vmem_budget: int = hw.VMEM_BUDGET,
+) -> BlockConfig | None:
+    """Blocking for the single-pass fused backward kernel.
+
+    Enumerates its own candidate space (the resident (L, bc, Kp) dU block
+    punishes wide C blocks, and small tile blocks are cheap because only
+    the U stream scales with ceil(T/bt)), minimizes the fused-backward
+    traffic under the fused-backward VMEM constraint, and returns None
+    when no candidate fits -- the signal for the two-pass fallback.
+    """
+    a = m + r - 1
+    L = a * a
+    t_cands = axis_candidates(T, 8, (8, 16, 32, 64, 128, 256))
+    c_cands = axis_candidates(C, 128, (128, 256))
+    k_cands = axis_candidates(K, 128, (128, 256))
+
+    best: BlockConfig | None = None
+    best_obj = None
+    for bt in t_cands:
+        for bc in c_cands:
+            for bk in k_cands:
+                Kp = round_up(K, bk)
+                vm = bwd_fused_vmem_bytes(L, m, Kp, bt, bc, bk, elt_bytes)
+                if vm > vmem_budget:
+                    continue
+                obj = hbm_traffic_bwd_fused(L, m, T, C, K, bt, bc, bk,
+                                            elt_bytes)
+                if (best is None or obj < best_obj
+                        or (obj == best_obj
+                            and (bt * bk) > (best.block_t * best.block_k))):
+                    best = BlockConfig(
+                        block_t=bt, block_c=bc, block_k=bk, vmem_bytes=vm,
+                        hbm_bytes_fused=obj, hbm_bytes_nonfused=obj,
+                        hbm_bytes_e2e=obj)
+                    best_obj = obj
+    return best
+
+
 def _make_config(L: int, m: int, T: int, C: int, K: int, bt: int, bc: int,
                  bk: int, elt: int, vm: int) -> BlockConfig:
     fused = hbm_traffic(L, m, T, C, K, bt, bk, elt, fused=True)

@@ -222,10 +222,40 @@ class GradPlan:
     dx: ConvPlan | None                   # plan for the rotated-filter dx conv
     t_est: float                          # modeled dw step seconds
     flops: int                            # dw GEMM + transform FLOPs
+    # ---- single-pass fused backward variant (kernels/wino_fused_bwd) ----
+    # Planned at the FORWARD m (the fused kernel shares the saved x tiling),
+    # with its own VMEM model and axis candidates.  bwd_algorithm is
+    # "fused_bwd" when the working set fits the budget, else "two_pass".
+    bwd_algorithm: str = "two_pass"
+    bwd_blocks: blocking.BlockConfig | None = None
+    hbm_bytes_bwd_fused: int = 0          # modeled single-pass traffic
+    hbm_bytes_bwd_two_pass: int = 0       # modeled PR-3 two-pass traffic
+    t_bwd_est: float = 0.0                # modeled fused dx+dw seconds
 
 
 def _grad_direct(spec: ConvSpec) -> GradPlan:
     return GradPlan(spec, "direct", None, None, None, 0.0, 0)
+
+
+def _fused_bwd_fields(spec: ConvSpec, m: int) -> dict:
+    """Plan the single-pass fused backward at the forward tile size ``m``."""
+    elt = spec.elt_bytes
+    r = spec.r
+    a = m + r - 1
+    L = a * a
+    T, _, _ = spec.tiles(m)
+    cfg = blocking.choose_bwd_blocks(T, spec.C, spec.K, m, r, elt)
+    if cfg is None:
+        return dict(bwd_algorithm="two_pass")
+    two_pass = blocking.hbm_traffic_bwd_two_pass(
+        L, m, T, spec.C, spec.K, cfg.block_t, cfg.block_c, cfg.block_k, elt)
+    # dx + dw GEMMs are each the forward GEMM's FLOPs; both transforms and
+    # the gy-side adjoint ride along (small next to the contractions).
+    flops = 2 * (2 * L * T * spec.C * spec.K)
+    t = max(flops / hw.PEAK_FLOPS_F32, cfg.hbm_bytes_fused / hw.HBM_BW)
+    return dict(bwd_algorithm="fused_bwd", bwd_blocks=cfg,
+                hbm_bytes_bwd_fused=cfg.hbm_bytes_fused,
+                hbm_bytes_bwd_two_pass=two_pass, t_bwd_est=t)
 
 
 @functools.lru_cache(maxsize=4096)
@@ -267,7 +297,12 @@ def _grad_plan(spec: ConvSpec, candidates: tuple[int, ...],
     dx_plan = plan(ConvSpec(N=spec.N, H=P, W=Q, C=spec.K, K=spec.C, r=r,
                             pad=max(r - 1 - spec.pad, 0), elt_bytes=elt),
                    candidates=candidates, mesh=mesh)
-    return GradPlan(spec, "winograd_grad", m, cfg, dx_plan, t, flops)
+    # The fused single-pass backward pairs with the FORWARD plan: it re-tiles
+    # the saved x at the forward m, so it is planned there, not at the dw m.
+    fwd = plan(spec, candidates=candidates, mesh=mesh)
+    bwd = (_fused_bwd_fields(spec, fwd.m)
+           if fwd.pipeline == "fused_e2e" else dict(bwd_algorithm="two_pass"))
+    return GradPlan(spec, "winograd_grad", m, cfg, dx_plan, t, flops, **bwd)
 
 
 def grad_plan(spec: ConvSpec, *, candidates: tuple[int, ...] = (2, 4, 6),
@@ -296,6 +331,15 @@ def grad_kernel_blocks(C: int, T: int, K: int, m: int, r: int,
     cfg = blocking.choose_blocks(C, T, K, m, r, elt_bytes, pipeline="nonfused")
     assert cfg is not None
     return cfg
+
+
+def bwd_kernel_blocks(T: int, C: int, K: int, m: int, r: int,
+                      elt_bytes: int = 4) -> blocking.BlockConfig | None:
+    """Blocking for the single-pass fused backward kernel -- the plan-layer
+    entry for ``kernels.ops.conv2d_fused_bwd`` (which sees the tiled
+    extents).  Returns None when the fused working set cannot fit the VMEM
+    budget; callers must then take the two-pass backward."""
+    return blocking.choose_bwd_blocks(T, C, K, m, r, elt_bytes)
 
 
 def kernel_blocks(T: int, C: int, K: int, m: int, r: int, elt_bytes: int,

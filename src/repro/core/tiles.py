@@ -91,6 +91,31 @@ def extract_output_tiles(gy: jax.Array, m: int, tH: int, tW: int) -> jax.Array:
     return gy.reshape(N * tH * tW, m, m, K)
 
 
+def overlap_add_tiles(dd: jax.Array, N: int, tH: int, tW: int, m: int, r: int,
+                      H: int, W: int, pad: int) -> jax.Array:
+    """(T, a, a, C) -> (N, H, W, C): the exact adjoint of ``pad_for_tiles``
+    + ``extract_tiles`` + ``flatten_tiles``.
+
+    Overlapping tiles scatter-ADD back onto the padded image (each padded
+    pixel is read by up to ceil(a/m)^2 tiles forward, so its gradient is
+    the sum of those tiles' contributions), then the pad border is cropped
+    (adjoint of zero-padding).  Realized with ``jax.linear_transpose`` over
+    the take-based gather, which XLA lowers to the dual scatter-add -- one
+    definition, provably the transpose of the forward extraction.
+    """
+    a = m + r - 1
+    C = dd.shape[-1]
+    Hp = tH * m + r - 1
+    Wp = tW * m + r - 1
+
+    def _gather(xp):
+        return flatten_tiles(extract_tiles(xp, m, r, tH, tW))
+
+    xp_shape = jax.ShapeDtypeStruct((N, Hp, Wp, C), dd.dtype)
+    (dxp,) = jax.linear_transpose(_gather, xp_shape)(dd.reshape(-1, a, a, C))
+    return dxp[:, pad:pad + H, pad:pad + W, :]
+
+
 # ------------------------------ 1-D variant ------------------------------
 # Used by the Whisper conv frontend (k=3, stride 1): the one assigned arch
 # where the paper's technique applies natively (DESIGN.md SSArch-applicability).

@@ -135,6 +135,91 @@ def filter_grad_inverse(dU: jax.Array, m: int, r: int) -> jax.Array:
     return jnp.einsum("ux,xyck,vy->uvck", ATg, du, ATg)
 
 
+# ----------------------- adjoint (single-pass) stages -----------------------
+#
+# The transforms are linear, so the exact VJP of the forward pipeline is its
+# transpose, stage by stage: gy runs BACKWARD through the output transform
+# (dO^ = A gy A^T), both gradients contract dO^ in the Winograd domain of the
+# FORWARD tiling, and the results run backward through the input / filter
+# transforms.  This is the dataflow of the single-pass fused backward
+# (kernels/wino_fused_bwd.py, DESIGN.md SS8): gy is transformed ONCE and the
+# forward V is shared by both gradient GEMMs,
+#
+#     dV(L, T, C) = dO^(L, T, K) x U^T(L, K, C)     -> dx  (contraction on K)
+#     dU(L, C, K) = V^T(L, C, T) x dO^(L, T, K)     -> dw  (contraction on T)
+#
+# Equivalence with the F(r, m) formulation is the D/D^-1 duality of SS8:
+# Gy = (D (.) D) dO^ and A'^T = G^T D^-1, so A'^T dU_Gy A' == G^T dU_adj G
+# exactly -- the adjoint epilogue IS the filter-grad inverse with the
+# diagonal scaling cancelled.
+
+
+def output_transform_adjoint(gy_tiles: jax.Array, m: int, r: int) -> jax.Array:
+    """(T, m, m, K) -> dO^ (L, T, K): the transpose of ``output_transform``.
+
+    dO^ = A gy A^T with A = (A^T)^T -- gy plays the role O^ played forward.
+    """
+    AT, _, _ = _consts(m, r, gy_tiles.dtype)
+    do = jnp.einsum("ix,tijk,jy->xytk", AT, gy_tiles, AT)
+    a = AT.shape[1]
+    return do.reshape(a * a, *do.shape[2:])  # (L, T, K)
+
+
+def input_transform_adjoint(dV: jax.Array, m: int, r: int) -> jax.Array:
+    """dV (L, T, C) -> dd (T, a, a, C): the transpose of ``input_transform``.
+
+    dd = B dV B^T; the overlap-add scatter back onto the image
+    (``tiles.overlap_add_tiles``) completes dL/dx.
+    """
+    _, _, BT = _consts(m, r, dV.dtype)
+    a = BT.shape[0]
+    dv = dV.reshape(a, a, *dV.shape[1:])  # (x, y, T, C)
+    return jnp.einsum("xi,xytc,yj->tijc", BT, dv, BT)
+
+
+def filter_transform_adjoint(dU: jax.Array, m: int, r: int) -> jax.Array:
+    """dU (L, C, K) -> dw (r, r, C, K): the transpose of ``filter_transform``.
+
+    dw = G^T dU G == A'^T (D (.) D dU) A' -- identical to
+    ``filter_grad_inverse`` on the D-scaled dU (DESIGN.md SS8 duality).
+    """
+    _, G, _ = _consts(m, r, dU.dtype)
+    a = G.shape[0]
+    du = dU.reshape(a, a, *dU.shape[1:])  # (x, y, C, K)
+    return jnp.einsum("xu,xyck,yv->uvck", G, du, G)
+
+
+def winograd_backward_reference(
+    x: jax.Array,
+    w: jax.Array,
+    gy: jax.Array,
+    *,
+    m: int,
+    pad: int = 0,
+    compute_dtype=jnp.float32,
+) -> tuple[jax.Array, jax.Array]:
+    """Single-pass (dx, dw) via the adjoint stages -- the jnp oracle for
+    ``kernels.wino_fused_bwd``.  x (N,H,W,C), w (r,r,C,K), gy (N,P,Q,K)."""
+    r = w.shape[0]
+    in_x, in_w = x.dtype, w.dtype
+    x = x.astype(compute_dtype)
+    w = w.astype(compute_dtype)
+    gy = gy.astype(compute_dtype)
+    N, H, W, C = x.shape
+    xp, tH, tW, P, Q = tiling.pad_for_tiles(x, m, r, pad)
+    d = tiling.flatten_tiles(tiling.extract_tiles(xp, m, r, tH, tW))
+    V = input_transform(d, m, r)                         # (L, T, C) -- shared
+    U = filter_transform(w, m, r)                        # (L, C, K)
+    gy_t = tiling.extract_output_tiles(gy, m, tH, tW)    # (T, m, m, K)
+    dO = output_transform_adjoint(gy_t, m, r)            # gy transformed ONCE
+    dV = jnp.einsum("ltk,lck->ltc", dO, U)               # dx GEMM (red = K)
+    dU = jnp.einsum("ltc,ltk->lck", V, dO)               # dw GEMM (red = T)
+    dd = input_transform_adjoint(dV, m, r)               # (T, a, a, C)
+    dx = tiling.overlap_add_tiles(dd, N, tH, tW, m, r, H, W, pad)
+    dw = filter_transform_adjoint(dU, m, r)
+    return dx.astype(in_x), dw.astype(in_w)
+
+
 def winograd_filter_grad_reference(
     x: jax.Array,
     gy: jax.Array,

@@ -23,6 +23,7 @@ through the bilinear algorithm exactly (DESIGN.md SS2).
 
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
@@ -37,6 +38,7 @@ from .grad_transform import grad_output_transform
 from .input_transform import input_transform
 from .output_transform import output_transform
 from .wino_fused import wino_fused
+from .wino_fused_bwd import wino_fused_bwd
 from .wino_fused_e2e import wino_fused_e2e
 from .wino_gemm import wino_gemm
 
@@ -47,6 +49,29 @@ def _pad_dims(T: int, C: int, K: int, cfg: BlockConfig) -> tuple[int, int, int]:
         round_up(C, cfg.block_c),
         round_up(K, cfg.block_k),
     )
+
+
+# Trace-time switch routing custom-VJP backwards through the PR-3 two-pass
+# path.  Read when the backward is TRACED (like ``executor.use_mesh``'s
+# ambient mesh), so wrap the whole grad/train-step call, not the apply.
+# Exists for golden fused-vs-two-pass comparisons and A/B benchmarking;
+# production traces take the fused single-pass backward whenever it fits.
+_FORCE_TWO_PASS_BWD = False
+
+
+@contextlib.contextmanager
+def force_two_pass_backward():
+    global _FORCE_TWO_PASS_BWD
+    prev = _FORCE_TWO_PASS_BWD
+    _FORCE_TWO_PASS_BWD = True
+    try:
+        yield
+    finally:
+        _FORCE_TWO_PASS_BWD = prev
+
+
+def two_pass_backward_forced() -> bool:
+    return _FORCE_TWO_PASS_BWD
 
 
 @functools.partial(
@@ -214,6 +239,52 @@ def _sharded_fwd(x, w, m, pad, mesh, mode):
 
 
 def _sharded_bwd(m, pad, mesh, mode, res, gy):
+    if _FORCE_TWO_PASS_BWD:
+        return _sharded_bwd_two_pass(m, pad, mesh, mode, res, gy)
+    return _sharded_bwd_fused(m, pad, mesh, mode, res, gy)
+
+
+def _sharded_bwd_fused(m, pad, mesh, mode, res, gy):
+    """Single-pass sharded backward: the adjoint formulation of the fused
+    kernel, distributed.  gy is transformed ONCE into the Winograd domain
+    and both gradient GEMMs contract against the same V/U/dO^ -- no second
+    forward pipeline over gy and no second x-side transform.  The dx GEMM's
+    (rows, contraction, cols) = (T, K, C) roles match ``grad_assignments``'
+    dx assignment natively, so every tensor keeps its forward placement
+    for all three mesh modes (DESIGN.md SS8 table)."""
+    from repro.core import winograd as wg
+    from repro.parallel.executor import execute_gemm, grad_assignments
+
+    x, w = res
+    r = w.shape[0]
+    dx_asn, dw_asn = grad_assignments(mode)
+    x32 = x.astype(jnp.float32)
+    gy32 = gy.astype(jnp.float32)
+    N, H, Wd, _ = x.shape
+
+    # ---- shared Winograd-domain operands, each built exactly once ----
+    xp, tH, tW, P, Q = tiling.pad_for_tiles(x32, m, r, pad)
+    d = tiling.flatten_tiles(tiling.extract_tiles(xp, m, r, tH, tW))
+    V = wg.input_transform(d, m, r)                       # (L, T, C)
+    U = wg.filter_transform(w.astype(jnp.float32), m, r)  # (L, C, K)
+    gy_t = tiling.extract_output_tiles(gy32, m, tH, tW)   # (T, m, m, K)
+    dO = wg.output_transform_adjoint(gy_t, m, r)          # (L, T, K)
+
+    # ---- dx: dV = dO^ x U^T (contraction K), inverse + OLA epilogue ----
+    dV = execute_gemm(dO, jnp.transpose(U, (0, 2, 1)),
+                      mode=dx_asn, mesh=mesh)             # (L, T, C)
+    dd = wg.input_transform_adjoint(dV, m, r)             # (T, a, a, C)
+    dx = tiling.overlap_add_tiles(dd, N, tH, tW, m, r, H, Wd, pad)
+
+    # ---- dw: dU = V^T x dO^ (contraction T), filter-grad epilogue ----
+    dU = execute_gemm(jnp.transpose(V, (0, 2, 1)), dO,
+                      mode=dw_asn, mesh=mesh)             # (L, C, K)
+    dw = wg.filter_transform_adjoint(dU, m, r)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+def _sharded_bwd_two_pass(m, pad, mesh, mode, res, gy):
+    """The PR-3 two-pass sharded backward: golden reference / A-B baseline."""
     from repro.core import winograd as wg
     from repro.parallel.executor import execute_gemm, grad_assignments
 
@@ -309,12 +380,96 @@ def conv2d_filter_grad(
                                block_k=cfg.block_k, interpret=interpret)
 
     # ---- the gradient GEMM on the forward GEMM kernel ----
-    dU = wino_gemm(jnp.transpose(V, (0, 2, 1)), Gy,
+    # transpose_lhs: the (L, Tp, Cp) X~ is read contraction-major through a
+    # transposed-read BlockSpec -- the (L, Cp, Tp) copy never materializes.
+    dU = wino_gemm(V, Gy, transpose_lhs=True,
                    block_t=cfg.block_t, block_k=cfg.block_k,
                    block_c=cfg.block_c, interpret=interpret)  # (L, Cp, Kp)
 
     # ---- inverse onto the r x r filter taps ----
     return wg.filter_grad_inverse(dU[:, :C, :K], m, r)
+
+
+# ------------------- single-pass fused backward -------------------
+#
+# The backward mirror of the fused_e2e forward (DESIGN.md SS8): ONE kernel
+# pass computes dx and dw together from the saved (x, w) and gy.  gy is
+# transformed once into the Winograd domain, both gradients contract
+# against a shared VMEM V-cache built from x, and the inverse/filter-grad
+# transforms run as epilogues -- no V, Gy/dO^, or dU HBM round trip.
+
+
+def fused_bwd_eligible(x_shape, w_shape, m: int, pad: int) -> bool:
+    """True when the single-pass backward's working set fits VMEM (the
+    resident dU block is the hard constraint).  Static-shape decision,
+    taken at trace time by ``_bwd``/callers; False routes to two-pass."""
+    from repro.core.plan import bwd_kernel_blocks  # deferred: import acyclic
+
+    N, H, W, C = x_shape
+    r = int(w_shape[0])
+    K = int(w_shape[-1])
+    P = H + 2 * pad - r + 1
+    Q = W + 2 * pad - r + 1
+    if P < 1 or Q < 1:
+        return False
+    T = N * tiling.num_tiles_1d(P, m) * tiling.num_tiles_1d(Q, m)
+    return bwd_kernel_blocks(T, C, K, m, r) is not None
+
+
+@functools.partial(jax.jit, static_argnames=("m", "pad", "interpret"))
+def conv2d_fused_bwd(
+    x: jax.Array,
+    w: jax.Array,
+    gy: jax.Array,
+    *,
+    m: int,
+    pad: int = 0,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Single-pass Winograd backward: (x, w, gy) -> (dx, dw), one kernel.
+
+    Winograd-domain tensors are held in f32 (same rounding-amplification
+    argument as the forward); returns f32, callers cast.  Callers must
+    check ``fused_bwd_eligible`` first -- this asserts feasibility.
+    """
+    from repro.core import winograd as wg
+    from repro.core.plan import bwd_kernel_blocks  # deferred: import acyclic
+
+    r = w.shape[0]
+    a = m + r - 1
+    N, H, W, C = x.shape
+    K = w.shape[-1]
+    x32 = x.astype(jnp.float32)
+    gy32 = gy.astype(jnp.float32)
+
+    # ---- tiling: overlapping x tiles + non-overlapping gy tiles ----
+    xp, tH, tW, P, Q = tiling.pad_for_tiles(x32, m, r, pad)
+    d = tiling.flatten_tiles(tiling.extract_tiles(xp, m, r, tH, tW))
+    T = d.shape[0]
+    d = d.reshape(T, a * a, C)
+    gy_t = tiling.extract_output_tiles(gy32, m, tH, tW).reshape(T, m * m, K)
+
+    # ---- blocking (plan layer): the fused-backward model ----
+    cfg = bwd_kernel_blocks(T, C, K, m, r)
+    assert cfg is not None, "check fused_bwd_eligible before calling"
+    Tp, Cp, Kp = _pad_dims(T, C, K, cfg)
+    d = common.pad_axis_to(common.pad_axis_to(d, 0, Tp), 2, Cp)
+    gy_t = common.pad_axis_to(common.pad_axis_to(gy_t, 0, Tp), 2, Kp)
+    w_flat = w.astype(jnp.float32).reshape(r * r, C, K)
+    w_flat = common.pad_axis_to(common.pad_axis_to(w_flat, 1, Cp), 2, Kp)
+    U = filter_transform(w_flat, m=m, r=r, block_c=cfg.block_c,
+                         block_k=cfg.block_k, interpret=interpret)
+
+    # ---- the single pass: dd and dU in one grid launch ----
+    dd, dU = wino_fused_bwd(
+        d, gy_t, U, m=m, r=r, block_t=cfg.block_t, block_c=cfg.block_c,
+        block_k=cfg.block_k, interpret=interpret)
+
+    # ---- epilogues outside the kernel: OLA scatter-add + r x r inverse ----
+    dd = dd[:T, :, :C].reshape(T, a, a, C)
+    dx = tiling.overlap_add_tiles(dd, N, tH, tW, m, r, H, W, pad)
+    dw = wg.filter_transform_adjoint(dU[:, :C, :K], m, r)
+    return dx, dw
 
 
 # --------------------- differentiable wrapper ---------------------
@@ -323,8 +478,11 @@ def conv2d_filter_grad(
 # Winograd pipelines: dL/dx is a full-correlation with the
 # channel-transposed, 180deg-rotated filter -- run through the same Pallas
 # forward pipeline -- and dL/dw is the F(r, m) filter-gradient pipeline
-# above.  Both of the training step's heavy backward GEMMs therefore run
-# on the optimized kernels (DESIGN.md SS8).
+# above.  For the fused_e2e pipeline both collapse into the single-pass
+# fused backward whenever its working set fits VMEM; the two-pass pair
+# stays as the fallback and the golden reference
+# (``force_two_pass_backward``).  Both of the training step's heavy
+# backward GEMMs therefore run on the optimized kernels (DESIGN.md SS8).
 
 
 def _dx_via_rotated_conv(conv_fn, gy: jax.Array, w: jax.Array,
@@ -366,6 +524,17 @@ def _bwd(m, pad, pipeline, res, gy):
     r = w.shape[0]
     if isinstance(pipeline, bool):
         pipeline = "fused" if pipeline else "nonfused"
+    # single-pass fused backward: the backward mirror of the e2e forward
+    if (pipeline == "fused_e2e" and not _FORCE_TWO_PASS_BWD
+            and fused_bwd_eligible(x.shape, w.shape, m, pad)):
+        dx, dw = conv2d_fused_bwd(x, w, gy, m=m, pad=pad)
+        return dx.astype(x.dtype), dw.astype(w.dtype)
+    return _bwd_two_pass(m, pad, pipeline, x, w, gy)
+
+
+def _bwd_two_pass(m, pad, pipeline, x, w, gy):
+    """The PR-3 two-pass backward: fallback and golden reference."""
+    r = w.shape[0]
     # dx: rotated-filter full correlation through the same Pallas pipeline
     dx = _dx_via_rotated_conv(
         lambda g, wr, s: conv2d_pallas(g, wr, m=m, pad=s, pipeline=pipeline),

@@ -9,10 +9,18 @@ axis happens in the f32 output block, which stays resident in VMEM across
 the innermost grid dimension (the paper keeps the same T_blk x K_blk output
 block in L2 across the C loop -- Eq. (10)).
 
+``transpose_lhs=True`` computes O^[l] = V[l]^T @ U[l] for V stored as
+(L, red, rows) -- a *transposed-read BlockSpec*: the lhs index map swaps the
+row/contraction grid axes so each (red_blk, row_blk) block is fetched
+straight from the untransposed layout and contracted on its leading dim by
+``dot_general``.  This is what lets the F(r, m) filter-gradient GEMM
+dU = X~^T-shaped contraction run without ever materializing the (L, C, T)
+transpose of X~ in HBM.
+
 This is the *non-fused* GEMM used by the three-stage baseline; the paper's
 contribution C1 (fused epilogue) lives in ``wino_fused.py``.
 
-Grid: (L, T/bt, K/bk, C/bc), C innermost.
+Grid: (L, rows/bt, K/bk, red/bc), contraction innermost.
 """
 
 from __future__ import annotations
@@ -26,20 +34,32 @@ from jax.experimental import pallas as pl
 from .common import default_interpret
 
 
-def _kernel(v_ref, u_ref, o_ref):
+def _kernel(v_ref, u_ref, o_ref, *, transpose_lhs: bool):
     c_idx = pl.program_id(3)
 
     @pl.when(c_idx == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    o_ref[0, :, :] += jnp.dot(
-        v_ref[0, :, :], u_ref[0, :, :], preferred_element_type=jnp.float32
-    ).astype(o_ref.dtype)
+    if transpose_lhs:
+        # lhs block is (red, rows): contract its LEADING dim against the
+        # rhs leading dim -- no in-VMEM transpose materializes either.
+        part = jax.lax.dot_general(
+            v_ref[0, :, :], u_ref[0, :, :],
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        part = jnp.dot(
+            v_ref[0, :, :], u_ref[0, :, :], preferred_element_type=jnp.float32
+        )
+    o_ref[0, :, :] += part.astype(o_ref.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_t", "block_k", "block_c", "interpret")
+    jax.jit,
+    static_argnames=("block_t", "block_k", "block_c", "transpose_lhs",
+                     "interpret"),
 )
 def wino_gemm(
     V: jax.Array,
@@ -48,22 +68,38 @@ def wino_gemm(
     block_t: int = 256,
     block_k: int = 128,
     block_c: int = 128,
+    transpose_lhs: bool = False,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """V (L,T,C) x U (L,C,K) -> O^ (L,T,K) in f32."""
+    """V (L,T,C) x U (L,C,K) -> O^ (L,T,K) in f32.
+
+    With ``transpose_lhs=True`` the lhs is stored contraction-major,
+    V (L,C,T): the result is still (L, T, K) = V^T @ U per l, with T read
+    from the lhs trailing dim via the transposed-read BlockSpec.
+    """
     if interpret is None:
         interpret = default_interpret()
-    L, T, C = V.shape
+    if transpose_lhs:
+        L, C, T = V.shape
+    else:
+        L, T, C = V.shape
     L2, C2, K = U.shape
     assert L == L2 and C == C2
     assert T % block_t == 0 and C % block_c == 0 and K % block_k == 0
 
+    if transpose_lhs:
+        lhs_spec = pl.BlockSpec((1, block_c, block_t),
+                                lambda l, t, k, c: (l, c, t))
+    else:
+        lhs_spec = pl.BlockSpec((1, block_t, block_c),
+                                lambda l, t, k, c: (l, t, c))
+
     grid = (L, T // block_t, K // block_k, C // block_c)
     return pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, transpose_lhs=transpose_lhs),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, block_t, block_c), lambda l, t, k, c: (l, t, c)),
+            lhs_spec,
             pl.BlockSpec((1, block_c, block_k), lambda l, t, k, c: (l, c, k)),
         ],
         out_specs=pl.BlockSpec((1, block_t, block_k), lambda l, t, k, c: (l, t, k)),

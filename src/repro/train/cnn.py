@@ -60,6 +60,7 @@ def build_cnn_train_step(
     algorithm: str = "auto",
     mesh=None,
     clip_norm: float | None = 1.0,
+    fused_backward: bool = True,
 ):
     """(state, batch) -> (state, metrics), jit-compatible with donated state.
 
@@ -68,6 +69,11 @@ def build_cnn_train_step(
     every Winograd-eligible conv dispatches ``conv2d_sharded_ad`` -- the
     custom-VJP sharded pipeline -- and the jitted step keeps its sharded
     form (forward and backward) forever.
+
+    ``fused_backward=False`` pins the custom-VJP backwards to the two-pass
+    path (``kernels.ops.force_two_pass_backward``) -- an A/B switch for
+    golden comparisons and the train-step benchmark; the default traces
+    the single-pass fused backward wherever it is feasible.
     """
 
     def loss_fn(params, batch):
@@ -75,7 +81,7 @@ def build_cnn_train_step(
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
-    def train_step(state: TrainState, batch: dict):
+    def train_step_inner(state: TrainState, batch: dict):
         (loss, metrics), grads = grad_fn(state.params, batch)
         if clip_norm is not None:
             grads, gnorm = clip_by_global_norm(grads, clip_norm)
@@ -84,6 +90,15 @@ def build_cnn_train_step(
         new_state = TrainState(step=state.step + 1, params=new_params,
                                opt_state=new_opt)
         return new_state, {"loss": loss, **metrics}
+
+    def train_step(state: TrainState, batch: dict):
+        # backward-path selection is read at TRACE time, like use_mesh
+        if fused_backward:
+            return train_step_inner(state, batch)
+        from repro.kernels.ops import force_two_pass_backward
+
+        with force_two_pass_backward():
+            return train_step_inner(state, batch)
 
     if mesh is None:
         return train_step

@@ -82,6 +82,81 @@ def test_choose_blocks_e2e_infeasible_returns_none():
     assert choose_blocks(512, 16384, 128, 6, 3, pipeline="fused") is not None
 
 
+def test_bwd_fused_blocks_fit_budget_on_table1_layers():
+    """The fused-backward blocking model: for every Table-1 layer (and
+    both backward-relevant tile sizes) the chosen blocks' modeled VMEM is
+    within budget and the feasibility signal is sound."""
+    from repro.models.cnn import TABLE1_LAYERS
+
+    for spec in TABLE1_LAYERS:
+        for m in (2, 4, 6):
+            a = m + spec.r - 1
+            L = a * a
+            P = spec.H + 2 * spec.pad - spec.r + 1
+            T = (-(-P // m)) ** 2
+            cfg = blocking.choose_bwd_blocks(T, spec.C, spec.K, m, spec.r)
+            assert cfg is not None, (spec.name, m)
+            Kp = round_up(spec.K, cfg.block_k)
+            vm = blocking.bwd_fused_vmem_bytes(
+                L, m, Kp, cfg.block_t, cfg.block_c, cfg.block_k, 4)
+            assert vm == cfg.vmem_bytes <= blocking.hw.VMEM_BUDGET, \
+                (spec.name, m, vm)
+            # padded extents divide the blocks (the kernel contract)
+            assert round_up(T, cfg.block_t) % cfg.block_t == 0
+            assert round_up(spec.C, cfg.block_c) % cfg.block_c == 0
+
+
+def test_bwd_fused_infeasible_returns_none():
+    # a resident (L, bc, Kp) dU block for K = 65536 at F(6, 3) cannot fit
+    assert blocking.choose_bwd_blocks(512, 128, 65536, 6, 3) is None
+
+
+def test_bwd_fused_traffic_strictly_below_two_pass_on_table1_layers():
+    """The PR's roofline claim, pointwise: at the chosen fused-backward
+    blocks, modeled single-pass HBM traffic is STRICTLY below the two-pass
+    backward for every Table-1 layer -- the fused pass deletes the V and
+    Gy/dO^ round trips, the dU round trip, and the gy halo re-extraction
+    that dx's second forward pipeline pays."""
+    from repro.models.cnn import TABLE1_LAYERS
+
+    for spec in TABLE1_LAYERS:
+        for m in (2, 4, 6):
+            a = m + spec.r - 1
+            L = a * a
+            P = spec.H + 2 * spec.pad - spec.r + 1
+            T = (-(-P // m)) ** 2
+            cfg = blocking.choose_bwd_blocks(T, spec.C, spec.K, m, spec.r)
+            assert cfg is not None, (spec.name, m)
+            fused = blocking.hbm_traffic_bwd_fused(
+                L, m, T, spec.C, spec.K,
+                cfg.block_t, cfg.block_c, cfg.block_k, 4)
+            two_pass = blocking.hbm_traffic_bwd_two_pass(
+                L, m, T, spec.C, spec.K,
+                cfg.block_t, cfg.block_c, cfg.block_k, 4)
+            assert fused == cfg.hbm_bytes_fused
+            assert fused < two_pass, (spec.name, m, fused, two_pass)
+
+
+def test_grad_plan_carries_fused_bwd_variant():
+    """GradPlan exposes the fused-backward variant whenever the forward
+    plan is fused_e2e: blocks chosen at the FORWARD m, both traffic models
+    populated, and the fused model strictly cheaper."""
+    from repro.core.plan import ConvSpec, grad_plan, plan
+
+    spec = ConvSpec(N=1, H=28, W=28, C=64, K=64, r=3, pad=1)
+    gp = grad_plan(spec)
+    fwd = plan(spec)
+    if fwd.pipeline == "fused_e2e":
+        assert gp.bwd_algorithm == "fused_bwd"
+        assert gp.bwd_blocks is not None
+        assert 0 < gp.hbm_bytes_bwd_fused < gp.hbm_bytes_bwd_two_pass
+        assert gp.t_bwd_est > 0
+    # ineligible (strided) shapes never carry a fused-bwd variant
+    strided = ConvSpec(N=1, H=28, W=28, C=8, K=8, r=3, stride=2)
+    assert grad_plan(strided).bwd_algorithm == "two_pass"
+    assert grad_plan(strided).bwd_blocks is None
+
+
 def test_e2e_traffic_below_fused_pipeline_pointwise():
     """For identical blocks, the single-pass pipeline strictly beats the
     two-stage fused pipeline: it deletes the input-transform round trip

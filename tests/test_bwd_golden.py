@@ -1,0 +1,224 @@
+"""Golden equivalence: single-pass fused backward vs the two-pass backward.
+
+The PR-3 two-pass backward (rotated-filter forward pipeline for dx + the
+F(r, m) filter-gradient pipeline for dw) is the golden reference; the
+single-pass fused backward (shared V-cache, gy transformed once --
+``kernels/wino_fused_bwd``) must match it on dx AND dw:
+
+  * at the jnp level (``winograd_backward_reference``, the adjoint
+    formulation the kernel implements) across every Table-1 layer --
+    spatial/8 in the default tier, full scale in the `slow` tier;
+  * at the Pallas level, ``jax.grad`` through the fused_e2e pipeline with
+    and without ``force_two_pass_backward`` on ragged shapes including
+    pad >= r;
+  * at bf16, through the f32-Winograd-domain path established in
+    test_conv_golden.py (both backwards hold the Winograd domain in f32,
+    so they agree to bf16 storage rounding);
+  * under the 8-device mesh for all three parallel modes, where a spy
+    also proves the single-pass path (not the two-pass fallback) is the
+    one actually taken.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import conv2d
+from repro.core import winograd as wg
+from repro.kernels import ops
+
+FP32_TOL = dict(atol=2e-4, rtol=2e-3)
+BF16_TOL = dict(atol=1e-1, rtol=1e-1)
+
+
+def _data(N, H, W, C, K, dtype=jnp.float32, seed=0):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (N, H, W, C), jnp.float32).astype(dtype)
+    w = (jax.random.uniform(kw, (3, 3, C, K), jnp.float32, -1, 1)
+         / np.sqrt(9 * C)).astype(dtype)
+    return x, w
+
+
+def _two_pass_reference(x, w, gy, *, m, pad):
+    """The PR-3 backward as jnp references: rotated-conv dx + F(r, m) dw."""
+    r = w.shape[0]
+    H, W = x.shape[1], x.shape[2]
+    w_rot = jnp.transpose(w[::-1, ::-1, :, :], (0, 1, 3, 2))
+    s = max(r - 1 - pad, 0)
+    dx = wg.winograd_conv2d_reference(gy, w_rot, m, pad=s)
+    crop = s - (r - 1 - pad)
+    if crop:
+        dx = dx[:, crop:crop + H, crop:crop + W, :]
+    dw = wg.winograd_filter_grad_reference(x, gy, r=r, m=m, pad=pad)
+    return dx, dw
+
+
+# --------------------- jnp level: Table-1 layer sweep ---------------------
+
+
+def _table1_sweep(scale):
+    from repro.models.cnn import TABLE1_LAYERS
+
+    for spec in TABLE1_LAYERS:
+        h = max(8, int(spec.H * scale))
+        kx, kw_, kg = jax.random.split(jax.random.PRNGKey(spec.C), 3)
+        x = jax.random.normal(kx, (1, h, h, spec.C), jnp.float32)
+        w = (jax.random.normal(kw_, (spec.r, spec.r, spec.C, spec.K),
+                               jnp.float32) / np.sqrt(spec.r ** 2 * spec.C))
+        P = h + 2 * spec.pad - spec.r + 1
+        gy = jax.random.normal(kg, (1, P, P, spec.K), jnp.float32)
+        for m in (2, 4):
+            dx_f, dw_f = wg.winograd_backward_reference(x, w, gy, m=m,
+                                                        pad=spec.pad)
+            dx_t, dw_t = _two_pass_reference(x, w, gy, m=m, pad=spec.pad)
+            for got, ref, name in ((dx_f, dx_t, "dx"), (dw_f, dw_t, "dw")):
+                s_ref = max(float(jnp.max(jnp.abs(ref))), 1.0)
+                np.testing.assert_allclose(
+                    np.asarray(got), np.asarray(ref),
+                    atol=1e-4 * s_ref, rtol=2e-3,
+                    err_msg=f"{spec.name} m={m} {name}")
+
+
+def test_fused_bwd_equals_two_pass_on_table1_layers():
+    """Single-pass (adjoint) == two-pass (dx AND dw), fp32, every Table-1
+    layer at spatial/8 (channels exact -- the benchmark convention)."""
+    _table1_sweep(0.125)
+
+
+@pytest.mark.slow
+def test_fused_bwd_equals_two_pass_on_table1_layers_fullscale():
+    _table1_sweep(1.0)
+
+
+# ------------------- Pallas level: the actual VJP paths -------------------
+
+
+def _pipeline_grads(x, w, pad, m, *, force_two_pass):
+    f = lambda x_, w_: jnp.sum(jnp.sin(conv2d(
+        x_, w_, pad=pad, algorithm="winograd_fused_e2e", m=m)))
+    if force_two_pass:
+        with ops.force_two_pass_backward():
+            return jax.grad(f, argnums=(0, 1))(x, w)
+    return jax.grad(f, argnums=(0, 1))(x, w)
+
+
+@pytest.mark.parametrize("shape,pad,m", [
+    ((1, 9, 11, 3, 5), 1, 2),
+    ((2, 13, 17, 4, 6), 0, 4),
+    ((1, 8, 9, 3, 4), 3, 2),      # pad >= r: clamped backward pad
+])
+def test_pallas_fused_bwd_equals_two_pass(shape, pad, m):
+    """jax.grad through fused_e2e: fused single-pass kernel vs the forced
+    two-pass backward, same trace, fp32."""
+    N, H, W, C, K = shape
+    x, w = _data(N, H, W, C, K, seed=H * W)
+    fused = _pipeline_grads(x, w, pad, m, force_two_pass=False)
+    two = _pipeline_grads(x, w, pad, m, force_two_pass=True)
+    for got, ref, name in zip(fused, two, ("dx", "dw")):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   err_msg=f"{shape} {name}", **FP32_TOL)
+
+
+def test_pallas_fused_bwd_equals_two_pass_bf16():
+    """bf16 through the f32-Winograd-domain path: both backwards round
+    only at storage, so they agree to bf16 tolerance."""
+    x, w = _data(1, 9, 11, 4, 4, jnp.bfloat16, seed=5)
+    fused = _pipeline_grads(x, w, 1, 2, force_two_pass=False)
+    two = _pipeline_grads(x, w, 1, 2, force_two_pass=True)
+    for got, ref, name in zip(fused, two, ("dx", "dw")):
+        assert got.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(ref, np.float32),
+            err_msg=f"bf16 {name}", **BF16_TOL)
+
+
+def test_fused_bwd_kernel_is_taken(monkeypatch):
+    """Spy: the fused_e2e backward actually calls the single-pass kernel
+    wrapper (not the two-pass fallback) on a feasible shape, and the
+    forced-two-pass context really routes around it."""
+    calls = {"fused": 0, "two_pass": 0}
+    orig_fused = ops.conv2d_fused_bwd
+    orig_two = ops._bwd_two_pass
+
+    def spy_fused(*a, **kw):
+        calls["fused"] += 1
+        return orig_fused(*a, **kw)
+
+    def spy_two(*a, **kw):
+        calls["two_pass"] += 1
+        return orig_two(*a, **kw)
+
+    monkeypatch.setattr(ops, "conv2d_fused_bwd", spy_fused)
+    monkeypatch.setattr(ops, "_bwd_two_pass", spy_two)
+    x, w = _data(1, 9, 11, 3, 5, seed=1)
+    _pipeline_grads(x, w, 1, 2, force_two_pass=False)
+    assert calls == {"fused": 1, "two_pass": 0}
+    _pipeline_grads(x, w, 1, 2, force_two_pass=True)
+    assert calls == {"fused": 1, "two_pass": 1}
+
+
+def test_fused_bwd_infeasible_shape_falls_back(monkeypatch):
+    """A shape whose fused-backward working set cannot fit VMEM routes to
+    the two-pass backward -- same gradients, no kernel assert."""
+    monkeypatch.setattr(ops, "fused_bwd_eligible",
+                        lambda *a, **kw: False)
+    calls = {"two_pass": 0}
+    orig_two = ops._bwd_two_pass
+
+    def spy_two(*a, **kw):
+        calls["two_pass"] += 1
+        return orig_two(*a, **kw)
+
+    monkeypatch.setattr(ops, "_bwd_two_pass", spy_two)
+    x, w = _data(1, 9, 11, 3, 5, seed=1)
+    _pipeline_grads(x, w, 1, 2, force_two_pass=False)
+    assert calls["two_pass"] == 1
+
+
+# ------------------------- mesh: all three modes -------------------------
+
+
+@pytest.mark.parametrize("mode", ["data", "2d", "model"])
+def test_sharded_fused_bwd_equals_two_pass(host_mesh8, mode):
+    """Single-pass sharded backward == two-pass sharded backward (dx AND
+    dw) for every parallel mode on the 8-device mesh."""
+    x, w = _data(1, 9, 11, 4, 6, seed=2)
+    f = lambda x_, w_: jnp.sum(jnp.sin(
+        conv2d(x_, w_, pad=1, algorithm="winograd", m=4,
+               mesh=host_mesh8, parallel_mode=mode)))
+    fused = jax.grad(f, argnums=(0, 1))(x, w)
+    with ops.force_two_pass_backward():
+        two = jax.grad(f, argnums=(0, 1))(x, w)
+    for got, ref, name in zip(fused, two, ("dx", "dw")):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   err_msg=f"{mode} {name}", **FP32_TOL)
+
+
+def test_sharded_fused_bwd_path_is_taken(host_mesh8, monkeypatch):
+    """Spy: the mesh backward runs the single-pass formulation (gy
+    transformed once, two execute_gemm calls) -- not the two-pass
+    fallback -- unless forced."""
+    calls = {"fused": 0, "two_pass": 0}
+    orig_fused = ops._sharded_bwd_fused
+    orig_two = ops._sharded_bwd_two_pass
+
+    def spy_fused(*a, **kw):
+        calls["fused"] += 1
+        return orig_fused(*a, **kw)
+
+    def spy_two(*a, **kw):
+        calls["two_pass"] += 1
+        return orig_two(*a, **kw)
+
+    monkeypatch.setattr(ops, "_sharded_bwd_fused", spy_fused)
+    monkeypatch.setattr(ops, "_sharded_bwd_two_pass", spy_two)
+    x, w = _data(1, 14, 14, 8, 8, seed=0)
+    f = lambda x_, w_: jnp.sum(conv2d(
+        x_, w_, pad=1, algorithm="winograd", m=4, mesh=host_mesh8,
+        parallel_mode="2d") ** 2)
+    jax.grad(f, argnums=(0, 1))(x, w)
+    assert calls == {"fused": 1, "two_pass": 0}
+    with ops.force_two_pass_backward():
+        jax.grad(f, argnums=(0, 1))(x, w)
+    assert calls == {"fused": 1, "two_pass": 1}

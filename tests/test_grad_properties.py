@@ -1,0 +1,134 @@
+"""Property-based gradient checks at the conv2d API boundary.
+
+``jax.test_util.check_grads`` (numerical differencing against the AD
+gradient, orders=1) over the deterministic conftest mini-grid: every
+pipeline x pad 0..3 x odd H/W, fp32 and bf16.  Any future kernel edit that
+silently breaks a VJP -- fused single-pass backward included -- fails here
+fast, on small shapes, without needing the golden sweeps.
+
+Mode coverage: the Pallas and sharded pipelines are ``jax.custom_vjp``
+functions, which do not support forward-mode AD, so they check in
+``rev`` mode; the jnp reference path has no custom VJP and checks in BOTH
+modes.  bf16 gradients cannot be numerically differenced (eps ~ 2^-8
+swamps the quotient), so bf16 checks the established f32-Winograd-domain
+property instead: bf16-path gradients track the f32-path gradients to
+storage-rounding tolerance (same contract as test_conv_golden.py).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from jax.test_util import check_grads
+
+from repro.core import conv2d
+
+#: custom-VJP pipelines: reverse mode only (custom_vjp has no JVP rule)
+PIPELINES = ["winograd_nonfused", "winograd_fused", "winograd_fused_e2e"]
+
+GRAD_TOL = dict(atol=5e-2, rtol=5e-2)
+BF16_TOL = dict(atol=1e-1, rtol=1e-1)
+
+
+def _data(H, W, C, K, dtype=jnp.float32, seed=0):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (1, H, W, C), jnp.float32).astype(dtype)
+    w = (jax.random.uniform(kw, (3, 3, C, K), jnp.float32, -1, 1)
+         / np.sqrt(9 * C)).astype(dtype)
+    return x, w
+
+
+def _loss(algorithm, pad, m):
+    return lambda x_, w_: jnp.sum(
+        jnp.sin(conv2d(x_, w_, pad=pad, algorithm=algorithm, m=m)))
+
+
+# ----------------------- fp32: numerical gradcheck -----------------------
+
+
+@settings(max_examples=6)
+@given(pad=st.integers(0, 3),
+       H=st.sampled_from([9, 11, 13]),
+       W=st.sampled_from([9, 13, 15]))
+def test_pipeline_vjps_check_grads(pad, H, W):
+    """check_grads (rev, order 1) for every Pallas pipeline, fp32.
+
+    pad sweeps through pad >= r (the clamped-backward-pad regime) and the
+    odd H/W keep every tile edge ragged; fused_e2e takes the single-pass
+    fused backward wherever it is feasible.
+    """
+    x, w = _data(H, W, 3, 4, seed=pad * 100 + H + W)
+    for algorithm in PIPELINES:
+        check_grads(_loss(algorithm, pad, 2), (x, w), order=1,
+                    modes=["rev"], **GRAD_TOL)
+
+
+@settings(max_examples=4)
+@given(pad=st.integers(0, 3), H=st.sampled_from([9, 11, 13]))
+def test_reference_vjp_and_jvp_check_grads(pad, H):
+    """The jnp reference path has no custom VJP: both AD modes check."""
+    x, w = _data(H, 11, 3, 4, seed=pad + H)
+    check_grads(_loss("winograd", pad, 4), (x, w), order=1,
+                modes=["fwd", "rev"], **GRAD_TOL)
+
+
+# ------------------- bf16: f32-Winograd-domain property -------------------
+
+
+@settings(max_examples=6)
+@given(pad=st.integers(0, 3),
+       H=st.sampled_from([9, 11, 13]),
+       algorithm=st.sampled_from(PIPELINES))
+def test_bf16_grads_track_f32_grads(pad, H, algorithm):
+    """bf16 pipeline gradients == f32 pipeline gradients to bf16 storage
+    rounding (the Winograd domain is held in f32 for sub-f32 inputs, so
+    the only loss is input/output storage -- the test_conv_golden
+    contract, extended to the backward)."""
+    x, w = _data(H, 9, 3, 4, seed=pad * 7 + H)
+    f32 = jax.grad(_loss(algorithm, pad, 2), argnums=(0, 1))(x, w)
+    bf = jax.grad(_loss(algorithm, pad, 2), argnums=(0, 1))(
+        x.astype(jnp.bfloat16), w.astype(jnp.bfloat16))
+    for got, ref, name in zip(bf, f32, ("dx", "dw")):
+        assert got.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(ref, np.float32),
+            err_msg=f"{algorithm} {name}", **BF16_TOL)
+
+
+# ------------------------- structural properties -------------------------
+
+
+@settings(max_examples=4)
+@given(pad=st.integers(0, 3), seed=st.integers(0, 10))
+def test_vjp_linearity_in_cotangent(pad, seed):
+    """The conv VJP is linear in the cotangent: vjp(a*g1 + g2) ==
+    a*vjp(g1) + vjp(g2) exactly (up to f32 rounding) -- a property the
+    shared-V single-pass backward must preserve since both its gradients
+    reuse one dO^."""
+    x, w = _data(9, 11, 3, 4, seed=seed)
+    f = lambda x_, w_: conv2d(x_, w_, pad=pad,
+                              algorithm="winograd_fused_e2e", m=2)
+    y, vjp = jax.vjp(f, x, w)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed + 1))
+    g1 = jax.random.normal(k1, y.shape, jnp.float32)
+    g2 = jax.random.normal(k2, y.shape, jnp.float32)
+    a = 0.37
+    lhs = vjp(a * g1 + g2)
+    rhs = [a * p + q for p, q in zip(vjp(g1), vjp(g2))]
+    for got, ref, name in zip(lhs, rhs, ("dx", "dw")):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4,
+                                   err_msg=f"linearity {name}")
+
+
+def test_mesh_vjp_check_grads(host_mesh8):
+    """check_grads through the sharded custom VJP (single-pass backward)
+    for all three mesh modes, on the 8-device simulated mesh."""
+    x, w = _data(9, 11, 4, 6, seed=3)
+    for mode in ("data", "2d", "model"):
+        f = lambda x_, w_: jnp.sum(jnp.sin(
+            conv2d(x_, w_, pad=1, algorithm="winograd", m=4,
+                   mesh=host_mesh8, parallel_mode=mode)))
+        check_grads(f, (x, w), order=1, modes=["rev"], **GRAD_TOL)

@@ -15,7 +15,8 @@ verify:
 	    tests/test_checkpoint_data.py
 	REPRO_HOST_DEVICES=8 $(PYTEST) -q -x tests/test_parallel_exec.py \
 	    tests/test_conv_grad.py tests/test_serve_scheduler.py \
-	    tests/test_serve_coalesce.py tests/test_bwd_golden.py \
+	    tests/test_serve_prefill.py tests/test_serve_coalesce.py \
+	    tests/test_serve_splitk.py tests/test_bwd_golden.py \
 	    tests/test_grad_properties.py
 
 # Full tier-1 (slow sweeps still deselected by default addopts)

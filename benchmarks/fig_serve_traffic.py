@@ -121,6 +121,78 @@ def lm_traffic_row(*, arch: str = "chatglm3_6b", n_requests: int = 24,
     }
 
 
+def lm_stall_row(*, arch: str = "chatglm3_6b", n_requests: int = 16,
+                 slots: int = 4, prompt_len: int = 8,
+                 long_prompt_len: int = 64, long_frac: float = 0.4,
+                 max_new: int = 16, prefill_chunk: int = 8, seed: int = 0,
+                 reps: int = 5) -> dict:
+    """Decode-stall p90 before/after chunked prefill on a long-prompt mix.
+
+    The stall a decode pool sees is the whole-step wall time of steps that
+    began with rows in flight (scheduler ``step_seconds`` /
+    ``step_had_inflight``): one-shot admission pays an entire
+    ``long_prompt_len``-token prefill inside such a step, chunked
+    admission at most ``prefill_budget`` chunks of ``prefill_chunk``
+    tokens.  Both policies replay the SAME seeded Poisson schedule
+    (``long_frac`` of prompts at ``long_prompt_len``) and must produce
+    identical token streams -- the chunk size is q_chunk-aligned, so
+    chunking never changes the attention path (DESIGN.md SS7/I5).  Each
+    policy runs ``reps`` times; the best (min) p90 is kept per policy.
+    """
+    from repro import configs
+    from repro.models.api import build
+    from repro.serve import (ContinuousBatchingScheduler, Request,
+                             ServeEngine, poisson_schedule)
+
+    cfg = configs.get_smoke_config(arch)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(api, params, max_len=long_prompt_len + max_new)
+    reqs = poisson_schedule(n_requests, cfg.vocab, prompt_len=prompt_len,
+                            max_new=max_new, seed=seed,
+                            long_prompt_len=long_prompt_len,
+                            long_frac=long_frac)
+    n_long = sum(1 for r in reqs
+                 if int(np.asarray(r.prompt).shape[-1]) == long_prompt_len)
+
+    # warm every trace both policies touch: one-shot prefills (short AND
+    # long), the chunk-sized prefill, and the pool decode
+    for chunk in (None, prefill_chunk):
+        ContinuousBatchingScheduler(engine, slots=slots,
+                                    prefill_chunk=chunk).run(
+            [Request(rid=-1 - j, prompt=reqs[0].prompt, max_new_tokens=2)
+             for j in range(slots)]
+            + [Request(rid=-100, prompt=np.zeros(long_prompt_len, np.int64),
+                       max_new_tokens=2)])
+
+    def best_run(chunk):
+        runs = []
+        for _ in range(reps):
+            s = ContinuousBatchingScheduler(engine, slots=slots,
+                                            prefill_chunk=chunk)
+            s.run(reqs)
+            stalls = [t for t, infl in zip(s.step_seconds,
+                                           s.step_had_inflight) if infl]
+            runs.append((float(np.percentile(stalls, 90)), s))
+        return min(runs, key=lambda x: x[0])
+
+    p90_before, before = best_run(None)
+    p90_after, after = best_run(prefill_chunk)
+    done_b = {c.rid: c for c in before.finished}
+    done_a = {c.rid: c for c in after.finished}
+    mismatch = sum(1 for r in reqs
+                   if done_b[r.rid].tokens != done_a[r.rid].tokens)
+    return {
+        "arch": cfg.name, "n_requests": n_requests, "slots": slots,
+        "long_prompt_len": long_prompt_len, "n_long_prompts": n_long,
+        "prefill_chunk": prefill_chunk,
+        "stall_p90_ms_oneshot": p90_before * 1e3,
+        "stall_p90_ms_chunked": p90_after * 1e3,
+        "stall_p90_improvement": p90_before / max(p90_after, 1e-12),
+        "chunked_stream_mismatches": mismatch,
+    }
+
+
 def cnn_coalesce_row(*, width_mult: float = 0.125, img: int = 32,
                      n_requests: int = 6, seed: int = 0) -> dict:
     """Coalesced vs per-request CNN inference on the 8-device host mesh.
@@ -186,7 +258,19 @@ def run(*, n_requests: int = 24, slots: int = 4, max_new: int = 24,
         "continuous-batch streams diverged from solo runs: "
         f"{lm['exact_mismatch_tokens']} mismatched tokens")
 
-    out = {"figure": "fig_serve_traffic", "lm": lm,
+    stall = lm_stall_row(n_requests=n_requests, slots=slots,
+                         max_new=max_new, seed=seed, reps=max(reps, 5))
+    emit([stall], "fig_serve_traffic: decode-stall p90, one-shot vs "
+                  "chunked prefill on a long-prompt Poisson mix")
+    assert stall["chunked_stream_mismatches"] == 0, (
+        "chunked-prefill streams diverged from one-shot admission: "
+        f"{stall['chunked_stream_mismatches']} requests")
+    assert stall["stall_p90_ms_chunked"] < stall["stall_p90_ms_oneshot"], (
+        "chunked prefill did not improve decode-stall p90: "
+        f"{stall['stall_p90_ms_chunked']:.3f} ms vs "
+        f"{stall['stall_p90_ms_oneshot']:.3f} ms one-shot")
+
+    out = {"figure": "fig_serve_traffic", "lm": lm, "lm_stall": stall,
            "measured_devices": jax.device_count()}
     if jax.device_count() >= MEASURE_DEVICES:
         cnn = cnn_coalesce_row(seed=seed)

@@ -14,5 +14,6 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -x \
 REPRO_HOST_DEVICES=8 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -q -x tests/test_parallel_exec.py \
     tests/test_conv_grad.py tests/test_serve_scheduler.py \
-    tests/test_serve_coalesce.py tests/test_bwd_golden.py \
+    tests/test_serve_prefill.py tests/test_serve_coalesce.py \
+    tests/test_serve_splitk.py tests/test_bwd_golden.py \
     tests/test_grad_properties.py "$@"

@@ -160,6 +160,54 @@ def build(cfg: ModelConfig) -> ModelApi:
 # for batch sizes B and 1, with each leaf's batch axis identifiable as the
 # unique axis whose extent differs between the two.
 
+class ExtrasBatchError(ValueError):
+    """Per-request modality extras that cannot form one uniform batch.
+
+    Raised by ``batch_extras`` (and through it the static-batching
+    baseline ``run_uniform_batches``) instead of silently dropping the
+    extras and producing a wrong baseline.
+    """
+
+
+# batch contract (module docstring): every extras leaf has batch axis 0
+# except vlm "positions", which is (3, B, S)
+_EXTRAS_BATCH_AXIS = {"positions": 1}
+
+
+def batch_extras(extras_list: list[dict | None]) -> dict:
+    """Stack per-request modality extras (each batch-1, the ``prefill_row``
+    shape) into one batched extras dict.
+
+    All-empty input returns {}.  A mix of with- and without-extras
+    requests, mismatched keys, or mismatched per-request leaf shapes
+    raises ``ExtrasBatchError`` -- a uniform batch shares one prefill
+    trace, so the extras must be uniform too.
+    """
+    has = [bool(e) for e in extras_list]
+    if not any(has):
+        return {}
+    if not all(has):
+        raise ExtrasBatchError(
+            "cannot batch: some requests carry modality extras and some "
+            "do not")
+    keys = set(extras_list[0])
+    for e in extras_list[1:]:
+        if set(e) != keys:
+            raise ExtrasBatchError(
+                f"cannot batch: extras keys differ, {sorted(keys)} vs "
+                f"{sorted(e)}")
+    out = {}
+    for k in sorted(keys):
+        leaves = [jnp.asarray(e[k]) for e in extras_list]
+        shapes = {l.shape for l in leaves}
+        if len(shapes) != 1:
+            raise ExtrasBatchError(
+                f"cannot batch: extras[{k!r}] shapes differ: "
+                f"{sorted(shapes)}")
+        out[k] = jnp.concatenate(leaves, axis=_EXTRAS_BATCH_AXIS.get(k, 0))
+    return out
+
+
 def vector_pos_cache(cache: dict, batch: int) -> dict:
     """Promote a fresh cache's scalar decode cursor to per-row (B,) cursors."""
     out = dict(cache)

@@ -392,6 +392,14 @@ def _attn_decode_splitk(q, k, v, *, causal_offset, window, softcap,
     pmax + two psums over ``seq_axes`` (a few KB of wire traffic) -- versus
     XLA's auto-SPMD fallback, which all-gathers the entire cache in fp32
     per layer (observed: 268 MB x 2 x n_layers per decoded token).
+
+    ``causal_offset`` may be a scalar (uniform decode) or a (B,) vector of
+    per-row cache cursors (continuous batching).  The vector offset is
+    sharded exactly like q's batch axis and each rank resolves its rows'
+    causal/window masks against its own key-position range -- every
+    K-shard sees the same per-row validity rule, so the pmax/psum softmax
+    reconciliation is row-independent and the batched result matches a
+    solo decode of each row bitwise.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -407,6 +415,7 @@ def _attn_decode_splitk(q, k, v, *, causal_offset, window, softcap,
     s_loc = Sk // n_chunks
 
     off = jnp.asarray(causal_offset, jnp.int32)
+    per_row = off.ndim == 1
     win = (jnp.asarray(window, jnp.int32) if window is not None
            else jnp.int32(1 << 30))
     lm = (kv_len_mask if kv_len_mask is not None
@@ -418,14 +427,24 @@ def _attn_decode_splitk(q, k, v, *, causal_offset, window, softcap,
         for a in seq_axes:
             idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
         kpos = idx * s_loc + jnp.arange(s_loc)[None, :]         # (1, s_loc)
-        qpos = jnp.arange(qb.shape[1])[:, None] + off_
+        if per_row:
+            # per-row cursors: row b's query sits at off_b + i; broadcast
+            # to (B_loc, Sq, s_loc) so the mask resolves per row
+            qpos = (off_[:, None, None]
+                    + jnp.arange(qb.shape[1])[None, :, None])
+        else:
+            qpos = jnp.arange(qb.shape[1])[:, None] + off_      # (Sq, 1)
         qg = qb.reshape(qb.shape[0], qb.shape[1], KV, G, hd)
         s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kb).astype(jnp.float32)
         s = s * scale
         if softcap is not None:
             s = jnp.tanh(s / softcap) * softcap
         mask = (kpos <= qpos) & (kpos > qpos - win_)
-        mask = mask[None, None, None] & lmb[:, None, None, None, :]
+        if per_row:
+            mask = mask[:, None, None]                          # (B,1,1,q,s)
+        else:
+            mask = mask[None, None, None]                       # (1,1,1,q,s)
+        mask = mask & lmb[:, None, None, None, :]
         s = jnp.where(mask, s, _NEG)
         m_l = jnp.max(s, axis=-1)
         m_g = jax.lax.pmax(m_l, seq_axes)
@@ -442,7 +461,8 @@ def _attn_decode_splitk(q, k, v, *, causal_offset, window, softcap,
         in_specs=(P(b_entry, None, None, None),
                   P(b_entry, seq_axes, None, None),
                   P(b_entry, seq_axes, None, None),
-                  P(b_entry, seq_axes), P(), P()),
+                  P(b_entry, seq_axes),
+                  P(b_entry) if per_row else P(), P()),
         out_specs=P(b_entry, None, None, None),
         check_vma=False,
     )(q, k, v, lm, off, win)
@@ -462,11 +482,13 @@ def _attn_core(
     seq_axes: tuple[str, ...] | None = None,   # decode: S-sharded cache
 ) -> jax.Array:
     Sq, Sk = q.shape[1], k.shape[1]
-    # per-row decode cursors ((B,) causal offset) only reach the plain path:
-    # split-K broadcasts a scalar offset into the shard_map and the flash
-    # q-chunking assumes a shared qpos base.
+    # split-K decode takes scalar AND per-row ((B,) vector) cursors: the
+    # offset is sharded like q's batch axis and masked per K-shard, so the
+    # continuous-batching path never regresses to plain attention under
+    # tensor parallelism.  Flash q-chunking still assumes a shared qpos
+    # base (prefill is per-request single-row, so its offset is scalar).
     per_row = jnp.ndim(causal_offset) == 1
-    if seq_axes and Sq == 1 and not per_row and Sk % max(
+    if seq_axes and Sq == 1 and Sk % max(
             1, _mesh_prod(get_abstract_mesh(), seq_axes)) == 0:
         return _attn_decode_splitk(
             q, k, v, causal_offset=causal_offset, window=window,

@@ -291,7 +291,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     return cache
 
 
-def _forward_cached(params, cfg, tokens, cache, chunk):
+def _forward_cached(params, cfg, tokens, cache, chunk,
+                    last_only: bool = False):
     B, S = tokens.shape
     pos0 = cache["pos"]
     base = pos0[:, None] if jnp.ndim(pos0) == 1 else pos0  # per-row cursors
@@ -324,13 +325,20 @@ def _forward_cached(params, cfg, tokens, cache, chunk):
         x, tst1 = jax.lax.scan(
             mamba_body, x, (params["tail"], cache["tail"]))
         new_cache["tail"] = tst1
+    if last_only:
+        # prefill serves only the last-token logits: slice the residual
+        # stream before the norm + vocab matmul (per-position maps, so the
+        # kept row is bitwise identical; every chunk of a chunked prefill
+        # pays 1/S of the unembed FLOPs)
+        x = x[:, -1:]
     x = L.apply_norm(params["ln_final"], x, cfg)
     logits = L.unembed(params["embed"], x, cfg)
     return logits, new_cache
 
 
 def prefill(params, cfg: ModelConfig, tokens, cache, chunk: int | None = 64):
-    logits, cache = _forward_cached(params, cfg, tokens, cache, chunk)
+    logits, cache = _forward_cached(params, cfg, tokens, cache, chunk,
+                                    last_only=True)
     return logits[:, -1, :], cache
 
 

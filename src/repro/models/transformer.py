@@ -239,8 +239,16 @@ def _constrain_cache(kv: dict, spec: tuple) -> dict:
     }
 
 
-def _forward_cached(params, cfg, tokens, cache, positions, spec):
-    """Shared prefill/decode body: writes cache at cache['pos']."""
+def _forward_cached(params, cfg, tokens, cache, positions, spec,
+                    last_only: bool = False):
+    """Shared prefill/decode body: writes cache at cache['pos'].
+
+    ``last_only`` unembeds only the final position (prefill serves just
+    the last-token logits): the residual stream is sliced BEFORE the
+    final norm + vocab matmul, so an S-token prefill -- and every chunk
+    of a chunked prefill -- pays 1/S of the unembed FLOPs.  Norm and
+    unembed are per-position maps, so the kept row is bitwise identical.
+    """
     x = L.embed(params["embed"], tokens, cfg).astype(jnp.dtype(cfg.dtype))
     if cfg.name.startswith("gemma"):
         x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
@@ -266,6 +274,8 @@ def _forward_cached(params, cfg, tokens, cache, positions, spec):
     x, new_kv = jax.lax.scan(
         body, x, (params["blocks"], windows, cache["layers"])
     )
+    if last_only:
+        x = x[:, -1:]
     x = L.apply_norm(params["ln_final"], x, cfg)
     logits = L.unembed(params["embed"], x, cfg)
 
@@ -285,7 +295,8 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, cache: dict,
     positions = pos0 + jnp.broadcast_to(
         jnp.arange(S, dtype=jnp.int32)[None], (B, S)
     )
-    logits, cache = _forward_cached(params, cfg, tokens, cache, positions, spec)
+    logits, cache = _forward_cached(params, cfg, tokens, cache, positions,
+                                    spec, last_only=True)
     return logits[:, -1, :], cache
 
 

@@ -57,6 +57,12 @@ class ServeEngine:
         self.max_len = max_len
         self._prefill = jax.jit(
             lambda p, batch, cache: api.prefill(p, batch, cache))
+        # chunked prefill runs the same prefill trace per chunk but donates
+        # the row cache (each chunk rewrites it in place; the caller always
+        # replaces its reference with the returned cache)
+        self._prefill_chunk = jax.jit(
+            lambda p, batch, cache: api.prefill(p, batch, cache),
+            donate_argnums=(2,))
         self._decode = jax.jit(
             lambda p, tok, cache: api.decode_step(p, tok, cache),
             donate_argnums=(2,))
@@ -147,20 +153,54 @@ class ServeEngine:
         return vector_pos_cache(self.api.init_cache(slots, self.max_len),
                                 slots)
 
-    def prefill_row(self, prompt: jax.Array, extras: dict | None = None):
+    def new_row_cache(self):
+        """Fresh single-row cache (the chunked-prefill substrate)."""
+        return self.api.init_cache(1, self.max_len)
+
+    def prefill_row_chunk(self, tokens: jax.Array, row_cache,
+                          extras: dict | None = None):
+        """Advance ONE prompt chunk against a single-row cache.
+
+        tokens: (1, c) int32 -- the next ``c`` prompt tokens.  The cache
+        cursor supplies the chunk's base position (RoPE angles, cache
+        writes and causal masks all key off ``cache["pos"]``), so feeding
+        a prompt chunk-by-chunk through this call is the SAME computation
+        a one-shot prefill performs, just sliced along the query axis.
+        Returns (last logits (1, V), cache); the cache argument is
+        donated.  Intermediate chunks' logits are cheap -- the model
+        prefills unembed only the final position -- and are discarded by
+        callers until the final chunk.
+        """
+        batch = {"tokens": tokens, **(extras or {})}
+        return self._prefill_chunk(self.params, batch, row_cache)
+
+    def prefill_row(self, prompt: jax.Array, extras: dict | None = None,
+                    *, chunk: int | None = None):
         """Prefill ONE request into a fresh single-row cache.
 
         prompt: (S,) or (1, S) int32.  Returns (last logits (1, V), row
         cache) -- exactly the state a solo ``generate`` of this prompt
         would hold before its first sample, which is what makes scheduler
         streams bitwise-identical to solo runs.
+
+        ``chunk`` processes the prompt ``chunk`` tokens at a time through
+        the same per-chunk trace the scheduler's interleaved prefill uses
+        (modality extras force the one-shot path: they describe the whole
+        prompt and cannot be sliced along the token axis).
         """
         prompt = jnp.asarray(prompt, jnp.int32)
         if prompt.ndim == 1:
             prompt = prompt[None]
-        cache = self.api.init_cache(1, self.max_len)
-        batch = {"tokens": prompt, **(extras or {})}
-        return self._prefill(self.params, batch, cache)
+        cache = self.new_row_cache()
+        S = prompt.shape[1]
+        if chunk is None or extras or S <= chunk:
+            batch = {"tokens": prompt, **(extras or {})}
+            return self._prefill(self.params, batch, cache)
+        logits = None
+        for s0 in range(0, S, chunk):
+            logits, cache = self.prefill_row_chunk(
+                prompt[:, s0:s0 + chunk], cache)
+        return logits, cache
 
     def adopt_row(self, batch_cache, row_cache, slot):
         """Scatter a prefilled single-row cache into slot ``slot``."""

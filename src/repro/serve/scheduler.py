@@ -32,7 +32,15 @@ Scheduler invariants (tested in tests/test_serve_scheduler.py):
       cannot walk off the cache;
   I4  liveness    -- a decode step runs whenever any slot is active;
       retirement (length or EOS) frees the slot for the next pending
-      request before the following step.
+      request before the following step;
+  I5  prefill containment -- with chunked prefill (``prefill_chunk``), a
+      step spends at most ``prefill_budget`` prompt chunks on admission
+      work, so one long prompt can never stall the in-flight decode pool
+      for more than a bounded slice of each step; a prefilling request
+      holds its reserved slot (never decoded, never re-assigned) until
+      its final chunk lands, and the chunk-by-chunk computation is the
+      one-shot prefill sliced along the query axis -- I1 exactness is
+      preserved.
 
 ``run_uniform_batches`` is the static-batching baseline the benchmark
 (benchmarks/fig_serve_traffic.py) compares against: requests grouped in
@@ -50,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.api import batch_extras
 from repro.serve.engine import CacheOverflowError, ServeEngine
 
 
@@ -76,20 +85,51 @@ class Completion:
     arrival: int
     admitted_step: int                # decode-step when the slot was filled
     finished_step: int                # decode-step after the last token
+    accepted_step: int = -1           # decode-step of first SUCCESSFUL submit
+
+    def __post_init__(self):
+        if self.accepted_step < 0:
+            self.accepted_step = self.arrival
 
     @property
     def latency_steps(self) -> int:
-        return self.finished_step - self.arrival
+        # from first successful admission into the queue, not first submit:
+        # a request rejected (oversize) and later resubmitted is charged
+        # from the resubmit that succeeded, never for the rejected interval
+        return self.finished_step - self.accepted_step
+
+
+@dataclasses.dataclass
+class _RowPrefill:
+    """In-flight chunked prefill: a reserved slot plus its partial cache."""
+
+    slot: int
+    req: Request
+    prompt: Any                       # (1, S) int32
+    cache: Any                        # single-row cache, cursor at ``done``
+    done: int = 0
 
 
 class ContinuousBatchingScheduler:
-    def __init__(self, engine: ServeEngine, *, slots: int):
+    def __init__(self, engine: ServeEngine, *, slots: int,
+                 prefill_chunk: int | None = None,
+                 prefill_budget: int = 1):
         if engine.api.cfg.family == "audio":
             raise NotImplementedError(
                 "continuous batching needs per-row positions; the whisper "
                 "decoder's sinusoid offset is batch-scalar")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if prefill_budget < 1:
+            raise ValueError(f"prefill_budget must be >= 1, got {prefill_budget}")
         self.engine = engine
         self.slots = slots
+        # chunked prefill (I5): admission prefills run prefill_chunk prompt
+        # tokens at a time, at most prefill_budget chunks per step, instead
+        # of the whole prompt inside one step.  None = one-shot admission.
+        self.prefill_chunk = prefill_chunk
+        self.prefill_budget = prefill_budget
+        self.prefilling: deque[_RowPrefill] = deque()
         self.cache = engine.new_batch_cache(slots)
         self.tok = jnp.zeros((slots, 1), jnp.int32)
         self.keys = jnp.tile(jax.random.PRNGKey(0)[None], (slots, 1))
@@ -101,12 +141,19 @@ class ContinuousBatchingScheduler:
         self.streams: dict[int, list[int]] = {}
         self.finished: list[Completion] = []
         self.rejected: list[tuple[int, CacheOverflowError]] = []
+        self._accepted: dict[int, int] = {}
         self.step_count = 0
         # benchmark counters: the decode loop only (admission prefills and
         # python bookkeeping excluded -- the uniform baseline is timed the
         # same way)
         self.decode_steps = 0
         self.decode_seconds = 0.0
+        # stall telemetry: whole-step wall time (admission prefill work
+        # INCLUDED) tagged with whether rows were already in flight when
+        # the step began -- the decode-stall distribution the traffic
+        # benchmark reports p90 of
+        self.step_seconds: list[float] = []
+        self.step_had_inflight: list[bool] = []
 
     # ------------------------------ admission ------------------------------
 
@@ -128,13 +175,18 @@ class ContinuousBatchingScheduler:
                 raise err
             self.rejected.append((req.rid, err))
             return False
+        # first SUCCESSFUL submit stamps the latency clock: a request
+        # rejected earlier and resubmitted is charged from here, not from
+        # its (stale) arrival
+        self._accepted.setdefault(req.rid,
+                                  max(req.arrival, self.step_count))
         self.pending.append(req)
         return True
 
-    def _admit_one(self, slot: int, req: Request) -> None:
-        # the same computation a solo generate performs up to its first
-        # sample: prefill alone, root-key split BEFORE the first draw
-        logits, row = self.engine.prefill_row(req.prompt, req.extras)
+    def _finalize_admission(self, slot: int, req: Request, logits, row) -> None:
+        # the same state a solo generate holds after its prefill: root-key
+        # split BEFORE the first draw, first token sampled from the prefill
+        # logits, the full row cache adopted into the pool
         key, sub = jax.random.split(jax.random.PRNGKey(req.seed))
         tok0 = self.engine._sample(logits, sub, req.temperature)
         self.cache = self.engine.adopt_row(self.cache, row, slot)
@@ -147,8 +199,32 @@ class ContinuousBatchingScheduler:
         self.streams[req.rid] = [int(tok0[0])]
         self._retire_if_done(slot)          # max_new_tokens == 1 / instant EOS
 
+    def _admit_one(self, slot: int, req: Request) -> None:
+        # the same computation a solo generate performs up to its first
+        # sample: prefill alone into a fresh single-row cache
+        logits, row = self.engine.prefill_row(req.prompt, req.extras)
+        self._finalize_admission(slot, req, logits, row)
+
+    def _enqueue_prefill(self, slot: int, req: Request) -> None:
+        # reserve the slot (slot_req set, active False) and queue the
+        # prompt for chunk-by-chunk prefill; the row joins the decode pool
+        # when its final chunk lands (_advance_prefills)
+        prompt = jnp.asarray(req.prompt, jnp.int32)
+        if prompt.ndim == 1:
+            prompt = prompt[None]
+        self.slot_req[slot] = req
+        self.prefilling.append(_RowPrefill(
+            slot=slot, req=req, prompt=prompt,
+            cache=self.engine.new_row_cache()))
+
+    def _free_slots(self) -> list[int]:
+        # a slot is free only if it is neither decoding (active) nor
+        # reserved by an in-flight chunked prefill (slot_req held)
+        return [b for b in range(self.slots)
+                if not self.active[b] and self.slot_req[b] is None]
+
     def _admit(self) -> None:
-        free = [b for b in range(self.slots) if not self.active[b]]
+        free = self._free_slots()
         while free and self.pending:
             req = self.pending.popleft()
             err = self._fits(req)           # re-checked: reject, don't corrupt
@@ -156,9 +232,35 @@ class ContinuousBatchingScheduler:
                 self.rejected.append((req.rid, err))
                 continue
             slot = free.pop(0)
+            S = int(np.asarray(req.prompt).shape[-1])
+            if (self.prefill_chunk is not None and not req.extras
+                    and S > self.prefill_chunk):
+                self._enqueue_prefill(slot, req)
+                continue
             self._admit_one(slot, req)
-            if not self.active[slot]:       # retired instantly: slot reusable
-                free.insert(0, slot)
+            if not self.active[slot] and self.slot_req[slot] is None:
+                free.insert(0, slot)        # retired instantly: slot reusable
+
+    def _advance_prefills(self) -> int:
+        """Spend up to ``prefill_budget`` prompt chunks on the prefill
+        queue (FIFO: the front request finishes first).  Returns the
+        number of chunks run.  A request whose final chunk lands is
+        admitted into its reserved slot exactly as the one-shot path
+        would admit it -- same logits, same first sample, same RNG chain.
+        """
+        spent = 0
+        while spent < self.prefill_budget and self.prefilling:
+            st = self.prefilling[0]
+            S = st.prompt.shape[1]
+            end = min(st.done + self.prefill_chunk, S)
+            logits, st.cache = self.engine.prefill_row_chunk(
+                st.prompt[:, st.done:end], st.cache)
+            st.done = end
+            spent += 1
+            if st.done == S:
+                self.prefilling.popleft()
+                self._finalize_admission(st.slot, st.req, logits, st.cache)
+        return spent
 
     # ----------------------------- retirement -----------------------------
 
@@ -167,7 +269,8 @@ class ContinuousBatchingScheduler:
         self.finished.append(Completion(
             rid=req.rid, tokens=self.streams[req.rid], arrival=req.arrival,
             admitted_step=int(self.admitted_step[slot]),
-            finished_step=self.step_count))
+            finished_step=self.step_count,
+            accepted_step=self._accepted.get(req.rid, req.arrival)))
         self.active[slot] = False
         self.slot_req[slot] = None
 
@@ -181,26 +284,45 @@ class ContinuousBatchingScheduler:
     # ------------------------------- stepping -------------------------------
 
     def step(self) -> bool:
-        """Admit into free slots, then one masked decode step for the whole
-        pool.  Returns False when nothing was active (no decode ran)."""
+        """Admit into free slots (spending at most ``prefill_budget``
+        chunks of queued prefill work), then one masked decode step for
+        the whole pool.  Returns False when nothing ran -- no active row
+        and no prefill chunk advanced."""
+        had_inflight = bool(self.active.any())
+        t_step = time.perf_counter()
         self._admit()
+        prefilled = self._advance_prefills()
         if not self.active.any():
+            if prefilled:
+                # prefill-only step: admission work ran but no decode --
+                # nothing was in flight, so nothing stalled
+                self.step_seconds.append(time.perf_counter() - t_step)
+                self.step_had_inflight.append(had_inflight)
+                return True
             return False
         active = jnp.asarray(self.active)
+        # reserved-but-prefilling slots hold a slot_req with active False:
+        # they sample as temperature-0 placeholders until admitted (their
+        # masked draw is discarded either way)
         temps = jnp.asarray(
-            [r.temperature if r is not None else 0.0 for r in self.slot_req],
+            [r.temperature if (r is not None and self.active[b]) else 0.0
+             for b, r in enumerate(self.slot_req)],
             jnp.float32)
         # one fused dispatch: masked decode + per-slot RNG-chain split
         # (key, sub = split(key), exactly the solo loop) + per-row sample
         # + masked token update; a retired row's burnt split is discarded
         # at its next admission, which reseeds from the request root
-        greedy = all(r is None or r.temperature == 0.0 for r in self.slot_req)
+        greedy = all(r is None or not self.active[b] or r.temperature == 0.0
+                     for b, r in enumerate(self.slot_req))
         t0 = time.perf_counter()
         toks, self.tok, self.keys, self.cache = self.engine.decode_rows_sampled(
             self.tok, self.cache, active, self.keys, temps, greedy=greedy)
         toks.block_until_ready()
-        self.decode_seconds += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.decode_seconds += t1 - t0
         self.decode_steps += 1
+        self.step_seconds.append(t1 - t_step)
+        self.step_had_inflight.append(had_inflight)
         self.step_count += 1
         toks_np = np.asarray(toks)
         for b in range(self.slots):
@@ -220,7 +342,8 @@ class ContinuousBatchingScheduler:
         decode-step; the clock jumps forward over idle gaps."""
         arrivals = deque(sorted(requests or [],
                                 key=lambda r: (r.arrival, r.rid)))
-        while arrivals or self.pending or self.active.any():
+        while (arrivals or self.pending or self.prefilling
+               or self.active.any()):
             while arrivals and arrivals[0].arrival <= self.step_count:
                 self.submit(arrivals.popleft(), strict=False)
             if not self.step():
@@ -237,22 +360,34 @@ class ContinuousBatchingScheduler:
 def poisson_schedule(n_requests: int, vocab: int, *, prompt_len: int = 8,
                      min_new: int = 2, max_new: int = 24,
                      mean_gap: float = 1.0, temperature: float = 0.0,
-                     seed: int = 0) -> list[Request]:
+                     seed: int = 0, long_prompt_len: int | None = None,
+                     long_frac: float = 0.0) -> list[Request]:
     """Seeded mixed-length synthetic arrival schedule (the one schedule
     generator shared by the CLI driver and the traffic benchmark):
     Poisson-gapped arrivals in decode-step units, uniform prompt length,
-    generation lengths uniform in [min_new, max_new]."""
+    generation lengths uniform in [min_new, max_new].
+
+    ``long_prompt_len``/``long_frac`` mix in long prompts: each request
+    independently draws length ``long_prompt_len`` with probability
+    ``long_frac`` (the chunked-prefill stall workload).  The default
+    (long_frac=0) draws NOTHING extra from the stream, so existing seeded
+    schedules are unchanged.
+    """
     rng = np.random.RandomState(seed)
     arrivals = np.cumsum(rng.poisson(mean_gap, n_requests))
-    return [
-        Request(rid=i,
-                prompt=rng.randint(0, vocab, size=prompt_len),
-                max_new_tokens=int(rng.randint(min_new, max_new + 1)),
-                temperature=temperature,
-                seed=seed + i,
-                arrival=int(a))
-        for i, a in enumerate(arrivals)
-    ]
+    reqs = []
+    for i, a in enumerate(arrivals):
+        S = prompt_len
+        if long_frac and long_prompt_len and rng.rand() < long_frac:
+            S = long_prompt_len
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.randint(0, vocab, size=S),
+            max_new_tokens=int(rng.randint(min_new, max_new + 1)),
+            temperature=temperature,
+            seed=seed + i,
+            arrival=int(a)))
+    return reqs
 
 
 # --------------------------- static-batching baseline ---------------------------
@@ -264,12 +399,15 @@ def run_uniform_batches(engine: ServeEngine, requests: list[Request],
     its LONGEST member finishes (drained slots burn dead decode); the next
     batch waits for the previous one to finish AND its members to arrive.
 
-    Greedy, token-only requests (the benchmark comparison runs at
-    temperature 0; per-request modality extras would need per-row prefill
-    -- that is the scheduler's job).  Prompt lengths must be uniform
-    within a group -- the engine's uniform-cursor contract.  Returns
-    streams, per-request latency in decode steps, and the decode-loop
-    wall time measured exactly like the scheduler's.
+    Greedy requests (the benchmark comparison runs at temperature 0).
+    Per-request modality extras are threaded through the batched prefill
+    when every group member carries shape-uniform extras
+    (``models.api.batch_extras``); a non-uniform mix raises
+    ``ExtrasBatchError`` rather than silently dropping them and producing
+    a wrong baseline.  Prompt lengths must be uniform within a group --
+    the engine's uniform-cursor contract.  Returns streams, per-request
+    latency in decode steps, and the decode-loop wall time measured
+    exactly like the scheduler's.
 
     Latency convention (matches ``Completion.latency_steps``): prefill is
     not charged a decode step in either policy, so a request whose batch
@@ -284,8 +422,7 @@ def run_uniform_batches(engine: ServeEngine, requests: list[Request],
     reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
     for at in range(0, len(reqs), slots):
         group = reqs[at:at + slots]
-        assert not any(r.extras for r in group), \
-            "uniform batching cannot mix per-request extras"
+        extras = batch_extras([r.extras for r in group])
         S = {int(np.asarray(r.prompt).shape[-1]) for r in group}
         assert len(S) == 1, f"uniform batching needs uniform prompt lens, got {S}"
         n_max = max(r.max_new_tokens for r in group)
@@ -296,7 +433,7 @@ def run_uniform_batches(engine: ServeEngine, requests: list[Request],
                 max_new_tokens=n_max, max_len=engine.max_len)
         prompts = jnp.stack([jnp.asarray(r.prompt, jnp.int32) for r in group])
         cache = engine.api.init_cache(len(group), engine.max_len)
-        batch = {"tokens": prompts}
+        batch = {"tokens": prompts, **extras}
         logits, cache = engine._prefill(engine.params, batch, cache)
         tok = jnp.argmax(logits[..., : engine.api.cfg.vocab], -1)
         outs = [np.asarray(tok)]

@@ -35,8 +35,8 @@ if _n_dev and "xla_force_host_platform_device_count" not in os.environ.get(
 #: every test module that requests ``host_mesh8`` -- the re-exec child
 #: runs them all in one invocation.
 HOST_MESH_MODULES = ("test_parallel_exec.py", "test_conv_grad.py",
-                     "test_serve_coalesce.py", "test_bwd_golden.py",
-                     "test_grad_properties.py")
+                     "test_serve_coalesce.py", "test_serve_splitk.py",
+                     "test_bwd_golden.py", "test_grad_properties.py")
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,290 @@
+"""Chunked prefill exactness + scheduler admission satellites.
+
+Chunked prefill (ServeEngine.prefill_row(chunk=), scheduler
+``prefill_chunk``/``prefill_budget``) is the one-shot prefill sliced
+along the query axis: the cache cursor supplies each chunk's base
+position, so RoPE angles, cache writes and causal masks are unchanged.
+Bitwise equality with the one-shot prefill holds whenever chunking does
+not flip the attention path (DESIGN.md SS7): here every case keeps both
+sides on one path -- chunk == q_chunk with S a q_chunk multiple (flash
+throughout) or chunk < q_chunk with S not a multiple (plain throughout).
+Recurrent families (rwkv state, zamba2's mamba scans) are
+chunk-invariant by construction; their attention layers follow the same
+alignment rule.
+
+Also pinned here (scheduler admission satellites):
+  * the ``_fits`` cache boundary -- a prompt of EXACTLY
+    max_len - max_new_tokens must be admitted (off-by-one regression);
+  * latency accounting for rejected-then-resubmitted requests --
+    ``Completion.latency_steps`` counts from the first SUCCESSFUL
+    submit, never the rejected interval;
+  * ``run_uniform_batches`` modality extras -- threaded through the
+    batched prefill when uniform, typed ``ExtrasBatchError`` when not.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+import numpy as np
+import pytest
+
+from repro.configs import chatglm3_6b, rwkv6_1_6b, whisper_small, zamba2_7b
+from repro.models import api as A
+from repro.models.api import ExtrasBatchError, batch_extras
+from repro.serve.engine import CacheOverflowError, ServeEngine
+from repro.serve.scheduler import (ContinuousBatchingScheduler, Request,
+                                   run_uniform_batches)
+
+MAX_LEN = 40
+
+FAMILY_CFGS = {
+    "chatglm3": chatglm3_6b.SMOKE,      # dense KV cache
+    "rwkv6": rwkv6_1_6b.SMOKE,          # recurrent state cache
+    "zamba2": zamba2_7b.SMOKE,          # hybrid mamba + attention cache
+}
+
+_engines: dict = {}
+
+
+def get_engine(name, cfg=None) -> ServeEngine:
+    if name not in _engines:
+        cfg = cfg if cfg is not None else FAMILY_CFGS[name]
+        api = A.build(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        _engines[name] = ServeEngine(api, params, max_len=MAX_LEN)
+    return _engines[name]
+
+
+def _assert_tree_bitwise(a, b, what):
+    eq = jtu.tree_map(lambda x, y: bool(jnp.array_equal(x, y)), a, b)
+    bad = [str(p) for p, ok in jtu.tree_flatten_with_path(eq)[0] if not ok]
+    assert not bad, f"{what} leaves differ: {bad}"
+
+
+# ------------------------- chunked == one-shot -------------------------
+
+@pytest.mark.parametrize("family", sorted(FAMILY_CFGS))
+@pytest.mark.parametrize("S,chunk", [(16, 8), (20, 5)])
+def test_chunked_prefill_bitwise_all_families(family, S, chunk):
+    """Chunked prefill logits AND every cache leaf equal the one-shot
+    prefill bitwise (flash-aligned 16/8 and plain-aligned 20/5)."""
+    eng = get_engine(family)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (S,), 0,
+                                eng.api.cfg.vocab)
+    l_one, c_one = eng.prefill_row(prompt)
+    l_chk, c_chk = eng.prefill_row(prompt, chunk=chunk)
+    assert jnp.array_equal(l_one, l_chk), f"{family}: final logits differ"
+    _assert_tree_bitwise(c_one, c_chk, f"{family} cache")
+
+
+def test_prefill_row_extras_force_one_shot():
+    """Modality extras describe the whole prompt and cannot be sliced:
+    prefill_row(chunk=) with extras must take the one-shot path."""
+    cfg = whisper_small.SMOKE
+    api = A.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(api, params, max_len=MAX_LEN)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (16,), 0, cfg.vocab)
+    audio = jax.random.normal(jax.random.PRNGKey(2),
+                              (1, cfg.encoder_len, cfg.d_model))
+    l_one, c_one = eng.prefill_row(prompt, {"audio": audio})
+    l_chk, c_chk = eng.prefill_row(prompt, {"audio": audio}, chunk=8)
+    assert jnp.array_equal(l_one, l_chk)
+    _assert_tree_bitwise(c_one, c_chk, "whisper cache")
+
+
+def test_prefill_row_chunk_interleaved_rows():
+    """Two prompts advanced chunk-by-chunk ALTERNATELY through separate
+    row caches (the scheduler's interleaving) land in the same state as
+    back-to-back one-shot prefills: rows are independent."""
+    eng = get_engine("chatglm3")
+    vocab = eng.api.cfg.vocab
+    pa = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, vocab)
+    pb = jax.random.randint(jax.random.PRNGKey(2), (1, 16), 0, vocab)
+    ca, cb = eng.new_row_cache(), eng.new_row_cache()
+    la = lb = None
+    for s0 in range(0, 16, 8):                      # A0 B0 A1 B1
+        la, ca = eng.prefill_row_chunk(pa[:, s0:s0 + 8], ca)
+        lb, cb = eng.prefill_row_chunk(pb[:, s0:s0 + 8], cb)
+    ra, ca_ref = eng.prefill_row(pa)
+    rb, cb_ref = eng.prefill_row(pb)
+    assert jnp.array_equal(la, ra) and jnp.array_equal(lb, rb)
+    _assert_tree_bitwise(ca, ca_ref, "row A cache")
+    _assert_tree_bitwise(cb, cb_ref, "row B cache")
+
+
+def _mixed_requests(vocab, n=6, seed=11):
+    rng = np.random.RandomState(seed)
+    return [
+        Request(rid=i,
+                prompt=rng.randint(0, vocab, size=int(rng.choice([8, 16]))),
+                max_new_tokens=int(rng.randint(3, 9)), seed=i, arrival=i)
+        for i in range(n)
+    ]
+
+
+def test_scheduler_chunked_streams_equal_unchunked():
+    """The scheduler with prefill_chunk produces the SAME streams and
+    completion set as the one-shot-admission scheduler (and therefore as
+    solo generate -- I1 composed with I5), with admission interleaved."""
+    eng = get_engine("chatglm3")
+    reqs = _mixed_requests(eng.api.cfg.vocab)
+    plain = ContinuousBatchingScheduler(eng, slots=3)
+    done_plain = plain.run([dataclasses.replace(r) for r in reqs])
+    chunked = ContinuousBatchingScheduler(eng, slots=3, prefill_chunk=8,
+                                          prefill_budget=1)
+    done_chunk = chunked.run([dataclasses.replace(r) for r in reqs])
+    assert set(done_plain) == set(done_chunk) == {r.rid for r in reqs}
+    for rid in done_plain:
+        assert done_chunk[rid].tokens == done_plain[rid].tokens, \
+            f"rid {rid}: chunked admission changed the stream"
+    assert not chunked.prefilling and not chunked.active.any()
+
+
+def test_prefill_only_steps_make_progress():
+    """With an empty decode pool, step() still advances queued prefill
+    chunks (returns True) and the long prompt is admitted within
+    ceil(S/chunk) steps -- I4 liveness extends to the prefill queue."""
+    eng = get_engine("chatglm3")
+    vocab = eng.api.cfg.vocab
+    sched = ContinuousBatchingScheduler(eng, slots=2, prefill_chunk=8,
+                                        prefill_budget=1)
+    sched.submit(Request(rid=0, prompt=np.arange(24) % vocab,
+                         max_new_tokens=3))
+    assert sched.step()                 # chunk 1 of 3: prefill-only step
+    assert sched.prefilling and not sched.active.any()
+    assert sched.step()                 # chunk 2
+    assert sched.step()                 # chunk 3 lands + first decode
+    assert 0 in sched.streams
+    while sched.step():
+        pass
+    assert sched.finished[0].rid == 0
+    assert len(sched.finished[0].tokens) == 3
+
+
+# --------------------------- _fits boundary ---------------------------
+
+def test_fits_admits_exact_boundary_prompt():
+    """S == max_len - max_new_tokens fills the cache EXACTLY: the last
+    generated token's KV lands at position max_len - 1.  Must be
+    admitted -- and one token more must be rejected."""
+    eng = get_engine("chatglm3")
+    vocab = eng.api.cfg.vocab
+    max_new = 8
+    S = MAX_LEN - max_new          # 32: q_chunk-aligned, so the chunked
+    # admission prefill and the solo one-shot stay on one attention path
+    fit = Request(rid=0, prompt=np.arange(S) % vocab, max_new_tokens=max_new)
+    over = Request(rid=1, prompt=np.arange(S + 1) % vocab,
+                   max_new_tokens=max_new)
+    sched = ContinuousBatchingScheduler(eng, slots=2, prefill_chunk=8)
+    assert sched.submit(dataclasses.replace(fit))
+    with pytest.raises(CacheOverflowError):
+        sched.submit(dataclasses.replace(over))
+    assert not sched.submit(dataclasses.replace(over), strict=False)
+    done = sched.run()
+    assert len(done[0].tokens) == max_new
+    assert [rid for rid, _ in sched.rejected] == [1]
+    # the solo path agrees on the boundary
+    toks = eng.generate(jnp.asarray(fit.prompt, jnp.int32)[None],
+                        max_new_tokens=max_new)
+    assert done[0].tokens == [int(t) for t in np.asarray(toks)[0]]
+    with pytest.raises(CacheOverflowError):
+        eng.generate(jnp.asarray(over.prompt, jnp.int32)[None],
+                     max_new_tokens=max_new)
+
+
+# ------------------------- latency accounting -------------------------
+
+def test_latency_counts_from_successful_resubmit():
+    """A request rejected at step 0 and resubmitted (fixed) once the
+    clock has advanced is charged from the successful submit, not from
+    its stale arrival -- the rejected interval is not scheduler latency."""
+    eng = get_engine("chatglm3")
+    vocab = eng.api.cfg.vocab
+    sched = ContinuousBatchingScheduler(eng, slots=2)
+    oversize = Request(rid=7, prompt=np.arange(MAX_LEN) % vocab,
+                       max_new_tokens=4, arrival=0)
+    assert not sched.submit(oversize, strict=False)     # rejected, step 0
+    # the pool advances on an unrelated request
+    sched.run([Request(rid=0, prompt=np.arange(8) % vocab,
+                       max_new_tokens=6)])
+    t_resubmit = sched.step_count
+    assert t_resubmit > 0
+    fixed = dataclasses.replace(oversize, prompt=np.arange(8) % vocab)
+    assert sched.submit(fixed)                          # first SUCCESS
+    done = sched.run()
+    c = done[7]
+    assert c.accepted_step == t_resubmit
+    assert c.latency_steps == c.finished_step - t_resubmit
+    assert c.latency_steps < c.finished_step - c.arrival
+
+
+def test_latency_unchanged_for_normal_requests():
+    """For a request admitted on first submit, accepted_step == arrival:
+    the satellite fix does not perturb ordinary latency accounting."""
+    eng = get_engine("chatglm3")
+    vocab = eng.api.cfg.vocab
+    reqs = [Request(rid=i, prompt=np.arange(8) % vocab, max_new_tokens=4,
+                    arrival=2 * i) for i in range(3)]
+    sched = ContinuousBatchingScheduler(eng, slots=2)
+    done = sched.run([dataclasses.replace(r) for r in reqs])
+    for r in reqs:
+        assert done[r.rid].accepted_step == r.arrival
+        assert done[r.rid].latency_steps == \
+            done[r.rid].finished_step - r.arrival
+
+
+# ------------------------ uniform-batch extras ------------------------
+
+def test_batch_extras_rules():
+    a = {"audio": jnp.zeros((1, 4, 8))}
+    assert batch_extras([None, {}, None]) == {}
+    out = batch_extras([a, a])
+    assert out["audio"].shape == (2, 4, 8)
+    with pytest.raises(ExtrasBatchError):
+        batch_extras([a, None])                          # mixed presence
+    with pytest.raises(ExtrasBatchError):
+        batch_extras([a, {"other": jnp.zeros((1, 4, 8))}])   # keys differ
+    with pytest.raises(ExtrasBatchError):
+        batch_extras([a, {"audio": jnp.zeros((1, 5, 8))}])   # shapes differ
+    # vlm positions batch on axis 1 per the batch contract
+    p = {"positions": jnp.zeros((3, 1, 6), jnp.int32)}
+    assert batch_extras([p, p])["positions"].shape == (3, 2, 6)
+
+
+def test_uniform_batches_threads_audio_extras():
+    """Uniform batching with per-request audio extras reproduces each
+    request's solo generate -- the baseline is no longer silently wrong."""
+    cfg = whisper_small.SMOKE
+    api = A.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(api, params, max_len=MAX_LEN)
+    rng = np.random.RandomState(5)
+    reqs = [
+        Request(rid=i, prompt=rng.randint(0, cfg.vocab, size=8),
+                max_new_tokens=5,
+                extras={"audio": jnp.asarray(
+                    rng.randn(1, cfg.encoder_len, cfg.d_model),
+                    jnp.float32)})
+        for i in range(2)
+    ]
+    out = run_uniform_batches(eng, reqs, slots=2)
+    for r in reqs:
+        toks = eng.generate(jnp.asarray(r.prompt, jnp.int32)[None],
+                            max_new_tokens=r.max_new_tokens,
+                            extras=r.extras)
+        assert out["streams"][r.rid] == [int(t) for t in np.asarray(toks)[0]]
+
+
+def test_uniform_batches_mixed_extras_typed_error():
+    eng = get_engine("chatglm3")
+    vocab = eng.api.cfg.vocab
+    reqs = [
+        Request(rid=0, prompt=np.arange(8) % vocab, max_new_tokens=3,
+                extras={"audio": jnp.zeros((1, 4, 8))}),
+        Request(rid=1, prompt=np.arange(8) % vocab, max_new_tokens=3),
+    ]
+    with pytest.raises(ExtrasBatchError):
+        run_uniform_batches(eng, reqs, slots=2)
